@@ -1,0 +1,39 @@
+"""Paper Fig. 14: contribution of each runtime mechanism at 64 req/s.
+Each mechanism is disabled in turn; importance = % drop in goodput (and SLO
+compliance delta) relative to the fully-optimized system."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import APP_NAMES, run_app
+from repro.core.controller import PATCHWORK
+
+ABLATIONS = {
+    "full": {},
+    "no_realloc": {"autoscale": False},
+    "no_routing": {"router_policy": "idle_first"},
+    "no_comm_mgmt": {"streaming_mgmt": False},
+    "no_edf": {"scheduler": "fifo"},
+}
+
+
+def main(rate: float = 64.0, fast: bool = False):
+    print("app,ablation,goodput_rps,slo_violation_pct,drop_pct")
+    results = {}
+    for app in APP_NAMES:
+        base = None
+        for name, overrides in ABLATIONS.items():
+            engine = dataclasses.replace(PATCHWORK, name=name, **overrides)
+            m, _ = run_app(app, engine, rate, duration=12.0 if fast else 20.0,
+                           slo_s=2.0)
+            good = m.goodput
+            if name == "full":
+                base = good
+            drop = 100.0 * (base - good) / max(base, 1e-9)
+            results[(app, name)] = (good, m.slo_violation_rate, drop)
+            print(f"{app},{name},{good:.2f},{m.slo_violation_rate*100:.1f},{drop:.1f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 3: CPU-heavy retriever co-located with the accelerator-bound
+generator. REAL measurement: run the JAX retrieval index and the generation
+engine interleaved vs isolated on this host and compare per-component
+throughput (paper: <1.1% interference)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.data.workload import synthetic_corpus
+from repro.serving.engine import GenerationEngine
+from repro.serving.retrieval import VectorIndex
+
+
+def _retrieval_qps(index, queries, seconds: float) -> float:
+    index.search(queries, k=10, n_probe=8)
+    n, t0 = 0, time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        jax.block_until_ready(index.search(queries, k=10, n_probe=8))
+        n += len(queries)
+    return n / (time.perf_counter() - t0)
+
+
+def _decode_tps(engine, seconds: float) -> float:
+    req = engine.submit(np.arange(8), max_new=10_000)
+    engine.step()
+    n, t0 = 0, time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        engine.step()
+        n += 1
+    req.done = True
+    engine.slots = [None] * engine.max_batch
+    return n / (time.perf_counter() - t0)
+
+
+def main(fast: bool = False):
+    secs = 1.5 if fast else 4.0
+    emb = synthetic_corpus(4096, 64, seed=0)
+    index = VectorIndex.build(emb, n_clusters=32)
+    queries = synthetic_corpus(16, 64, seed=1)
+    cfg = smoke_variant(get_arch("smollm-135m"))
+    engine = GenerationEngine(cfg, max_batch=1, max_seq=4096)
+
+    iso_r = _retrieval_qps(index, queries, secs)
+    iso_g = _decode_tps(engine, secs)
+
+    # co-located: interleave the two workloads on the same host
+    n_r = n_g = 0
+    req = engine.submit(np.arange(8), max_new=100_000)
+    engine.step()
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < 2 * secs:
+        jax.block_until_ready(index.search(queries, k=10, n_probe=8))
+        n_r += len(queries)
+        engine.step()
+        n_g += 1
+    dt = time.perf_counter() - t0
+    co_r, co_g = n_r / dt, n_g / dt
+
+    print("component,isolated,colocated,note")
+    print(f"retriever_qps,{iso_r:.1f},{co_r:.1f},interleaved-host (paper: <1.1% delta on separate pools)")
+    print(f"generator_sps,{iso_g:.1f},{co_g:.1f},steps/s")
+    print("\nnote: single-host interleaving shares one CPU; the paper's claim")
+    print("(CPU retriever does not degrade GPU decode) maps to disjoint")
+    print("CPU/TPU resource pools in the cluster model (see simcluster.Node).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.apps import make_app
+from repro.core.controller import (
+    MONOLITHIC,
+    PATCHWORK,
+    RAY_LIKE,
+    EngineConfig,
+    PatchworkRuntime,
+)
+from repro.data.workload import make_workload
+
+BUDGETS = {"GPU": 32, "CPU": 256, "RAM": 1024}
+ENGINES = {"patchwork": PATCHWORK, "monolithic": MONOLITHIC, "ray_like": RAY_LIKE}
+APP_NAMES = ["vrag", "crag", "srag", "arag"]
+
+
+def run_app(app_name: str, engine, rate: float, duration: float = 20.0,
+            slo_s: float = None, seed: int = 0, budgets=None, **kw):
+    app = make_app(app_name)
+    rt = PatchworkRuntime(app, budgets or BUDGETS, engine=engine,
+                          slo_s=slo_s, seed=seed, **kw)
+    m = rt.run(make_workload(rate, duration, seed=seed))
+    return m, rt
+
+
+def low_load_mean_latency(app_name: str, seed: int = 0) -> float:
+    """SLO base: mean latency under Patchwork at low load (paper §4.1)."""
+    m, _ = run_app(app_name, PATCHWORK, rate=4, duration=15, seed=seed)
+    return float(np.mean(m.latencies)) if m.latencies else 0.5
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,47 @@
+"""Paper Fig. 3 + Fig. 10: per-component time share across the four RAG
+workflows, and the C-RAG grader-bottleneck view before/after Patchwork's
+allocation."""
+from __future__ import annotations
+
+from benchmarks.common import APP_NAMES, run_app
+from repro.core.controller import MONOLITHIC, PATCHWORK, RAY_LIKE
+
+
+def main(fast: bool = False, app: str = None):
+    # include Graph-RAG: the paper's example of a retrieval-dominated
+    # pipeline needing ~3:1 retrieval-side:generator provisioning
+    apps = [app] if app else APP_NAMES + ["graphrag"]
+    print("app,component,time_share_pct")
+    shares = {}
+    for a in apps:
+        m, _ = run_app(a, PATCHWORK, rate=16, duration=12.0 if fast else 20.0)
+        total = sum(m.comp_busy.values())
+        for comp, busy in sorted(m.comp_busy.items()):
+            pct = 100 * busy / max(total, 1e-9)
+            shares[(a, comp)] = pct
+            print(f"{a},{comp},{pct:.1f}")
+    # Fig. 10: grader bottleneck alleviated — queue-time share per component
+    print("\ncrag: per-instance-count comparison (patchwork vs uniform)")
+    m_pw, rt_pw = run_app("crag", PATCHWORK, rate=24, duration=15)
+    m_rl, rt_rl = run_app("crag", RAY_LIKE, rate=24, duration=15)
+    for comp in sorted(rt_pw.instances):
+        print(f"crag,{comp},pw_instances={len(rt_pw.instances[comp])},"
+              f"rl_instances={len(rt_rl.instances.get(comp, []))}")
+    # retrieval share spread (paper: 18–62%); Graph-RAG counts expansion too
+    retr = {}
+    for (a, c), v in shares.items():
+        if "Retriever" in c or "Expander" in c:
+            retr[a] = retr.get(a, 0) + v
+    if retr:
+        print(f"\nretrieval_share_range,{min(retr.values()):.0f}-{max(retr.values()):.0f}%")
+    # Graph-RAG provisioning ratio (paper: ~3:1 retrieval-side : generators)
+    m_g, rt_g = run_app("graphrag", PATCHWORK, rate=24, duration=10)
+    r_side = sum(len(v) for k, v in rt_g.instances.items()
+                 if "Retriever" in k or "Expander" in k)
+    g_side = max(len(rt_g.instances.get("GGenerator", [])), 1)
+    print(f"graphrag_provisioning,retrieval-side {r_side} : generators {g_side}")
+    return shares
+
+
+if __name__ == "__main__":
+    main()

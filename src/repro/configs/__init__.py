@@ -1,0 +1,70 @@
+"""Config registry: 10 assigned architectures x 4 assigned input shapes."""
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    smoke_variant,
+)
+from repro.configs import (
+    hymba_1_5b,
+    internvl2_1b,
+    llama4_scout_17b_a16e,
+    minicpm3_4b,
+    mixtral_8x22b,
+    phi3_medium_14b,
+    qwen2_5_3b,
+    rwkv6_7b,
+    smollm_135m,
+    whisper_large_v3,
+)
+
+ARCHS = {
+    "rwkv6-7b": rwkv6_7b.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "whisper-large-v3": whisper_large_v3.CONFIG,
+    "minicpm3-4b": minicpm3_4b.CONFIG,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e.CONFIG,
+    "smollm-135m": smollm_135m.CONFIG,
+    "mixtral-8x22b": mixtral_8x22b.CONFIG,
+    "internvl2-1b": internvl2_1b.CONFIG,
+    "qwen2.5-3b": qwen2_5_3b.CONFIG,
+    "phi3-medium-14b": phi3_medium_14b.CONFIG,
+}
+
+# variants used only in beyond-paper perf experiments
+VARIANTS = {
+    "qwen2.5-3b-swa": qwen2_5_3b.CONFIG_SWA,
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    if name in VARIANTS:
+        return VARIANTS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def arch_runs_shape(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Assignment rules: long_500k only for sub-quadratic archs; decode shapes
+    skip encoder-only archs (none assigned here)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "VARIANTS",
+    "ModelConfig",
+    "ShapeConfig",
+    "arch_runs_shape",
+    "get_arch",
+    "get_shape",
+    "smoke_variant",
+]

@@ -1,0 +1,262 @@
+"""Configuration system for Patchwork's model zoo and input shapes.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the four
+assigned input shapes as ``ShapeConfig``. Configs are plain dataclasses so
+they can be constructed statically (no jax import side effects) and hashed
+for jit caching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Attention / mixer kinds
+# ---------------------------------------------------------------------------
+ATTN_FULL = "full"              # causal full attention
+ATTN_SWA = "swa"                # sliding-window attention
+ATTN_CHUNKED_LOCAL = "chunked"  # llama4-style chunked local attention
+ATTN_MLA = "mla"                # DeepSeek/MiniCPM3 multi-head latent attention
+MIXER_RWKV6 = "rwkv6"           # attention-free, data-dependent decay (Finch)
+MIXER_HYBRID = "hybrid"         # parallel attention + SSM heads (Hymba)
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters. Field names follow the assignment table."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    num_heads: int = 0               # 0 for attention-free archs
+    num_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention flavour ---------------------------------------------------
+    attn_type: str = ATTN_FULL
+    window: int = 4096               # SWA window
+    chunk_size: int = 8192           # chunked-local attention chunk
+    global_layer_every: int = 0      # >0: every k-th layer uses full attention
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+
+    # --- MLA (minicpm3 / deepseek-style) -------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ------------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    n_shared_experts: int = 0        # llama4 shared expert
+    moe_layer_every: int = 1         # 1 = every layer is MoE
+
+    # --- SSM / RWKV ------------------------------------------------------------
+    ssm_state: int = 0               # mamba state size (hymba)
+    ssm_conv: int = 4                # depthwise conv width for mamba branch
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder (whisper) ---------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper: 1500 frame embeddings (stub frontend)
+
+    # --- vlm --------------------------------------------------------------------
+    num_patch_tokens: int = 0        # internvl2: prefix of stub patch embeddings
+
+    # --- hybrid (hymba) ----------------------------------------------------------
+    num_meta_tokens: int = 0
+
+    # --- activation / numerics ----------------------------------------------------
+    kv_cache_quant: bool = False     # int8 KV cache (serving; beyond-paper H3)
+    kv_quant_scale: float = 0.05     # static symmetric scale for int8 cache
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"                # silu (swiglu) | gelu (whisper-style mlp)
+    dtype: str = "float32"           # compute dtype: float32 on CPU, bfloat16 on TPU
+
+    # --- citation --------------------------------------------------------------
+    source: str = ""
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ----- derived quantities ---------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding tables pad the vocab to a multiple of 128 so
+        the vocab dim shards on TP=16 meshes (standard practice; pad logits
+        are masked to -inf). The logical vocab stays exact."""
+        return (self.vocab_size + 127) // 128 * 128
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.attn_type == MIXER_RWKV6
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if the arch can serve a 500k-token context (bounded attention
+        reach or recurrent state)."""
+        if self.attn_type in (MIXER_RWKV6, MIXER_HYBRID):
+            return True
+        if self.attn_type == ATTN_SWA:
+            return True
+        if self.attn_type == ATTN_CHUNKED_LOCAL:
+            return True
+        return False
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def layer_is_moe(self, layer: int) -> bool:
+        return self.is_moe and (layer % max(self.moe_layer_every, 1) == 0)
+
+    def layer_attn_type(self, layer: int) -> str:
+        """Per-layer attention flavour (llama4 iRoPE: every Nth layer global)."""
+        if (
+            self.attn_type == ATTN_CHUNKED_LOCAL
+            and self.global_layer_every
+            and (layer + 1) % self.global_layer_every == 0
+        ):
+            return ATTN_FULL
+        return self.attn_type
+
+    def param_count(self) -> int:
+        """Analytic parameter count N (for MODEL_FLOPS = 6*N*D roofline term)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        return _param_count(self, active_only=True)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _mixer_params(cfg: ModelConfig, attn_type: str) -> int:
+    d = cfg.d_model
+    if attn_type == MIXER_RWKV6:
+        h = d // cfg.rwkv_head_dim
+        # r,k,v,g,o projections + decay lora + token-shift mix params
+        return 5 * d * d + 2 * (d * 64 + 64 * d) + 6 * d + h * cfg.rwkv_head_dim
+    if attn_type == ATTN_MLA:
+        qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        n = 0
+        if cfg.q_lora_rank:
+            n += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qk_head
+        else:
+            n += d * cfg.num_heads * qk_head
+        n += d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        n += cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        n += cfg.num_heads * cfg.v_head_dim * d
+        return n
+    # GQA projections
+    n = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.qkv_bias:
+        n += cfg.q_dim + 2 * cfg.kv_dim
+    if attn_type == MIXER_HYBRID:
+        # parallel mamba branch: in_proj (x,z), conv, dt/B/C projections, out
+        di = cfg.d_model  # inner dim == d_model for the SSM branch
+        n += d * 2 * di + di * cfg.ssm_conv + di * (cfg.ssm_state * 2 + di // 64) + di * d
+    return n
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    total = v * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * v
+    ffn_dense = 3 * d * f if cfg.act == "silu" else 2 * d * f
+
+    def moe_ffn():
+        e = cfg.num_experts_per_tok if active_only else cfg.num_experts
+        n = e * ffn_dense + d * cfg.num_experts  # router
+        n += cfg.n_shared_experts * ffn_dense
+        return n
+
+    n_dec = cfg.num_layers
+    for layer in range(n_dec):
+        total += _mixer_params(cfg, cfg.layer_attn_type(layer))
+        total += moe_ffn() if cfg.layer_is_moe(layer) else ffn_dense
+        total += 2 * d  # norms
+        if cfg.is_encoder_decoder:  # cross attention block
+            total += _mixer_params(cfg, ATTN_FULL) + d
+    for _ in range(cfg.encoder_layers):
+        total += _mixer_params(cfg, ATTN_FULL) + ffn_dense + 2 * d
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts."""
+    kw = dict(
+        name=cfg.name + "-smoke",
+        num_layers=2,
+        d_model=256,
+        d_ff=512,
+        vocab_size=512,
+    )
+    if cfg.num_heads:
+        kw["num_heads"] = 4
+        kw["num_kv_heads"] = max(1, min(cfg.num_kv_heads, 2))
+        kw["head_dim"] = 64
+    if cfg.attn_type == ATTN_MLA:
+        kw.update(q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32,
+                  qk_rope_head_dim=16, v_head_dim=32)
+    if cfg.is_moe:
+        kw["num_experts"] = min(cfg.num_experts, 4)
+        kw["num_experts_per_tok"] = min(cfg.num_experts_per_tok, 2)
+    if cfg.attn_type == MIXER_RWKV6:
+        kw["rwkv_head_dim"] = 32
+    if cfg.attn_type == MIXER_HYBRID:
+        kw["ssm_state"] = min(cfg.ssm_state, 8)
+        kw["num_meta_tokens"] = min(cfg.num_meta_tokens, 8)
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = 2
+        kw["encoder_seq"] = 64
+    if cfg.num_patch_tokens:
+        kw["num_patch_tokens"] = 16
+    if cfg.global_layer_every:
+        kw["global_layer_every"] = 2
+    kw["chunk_size"] = min(cfg.chunk_size, 64)
+    kw["window"] = min(cfg.window, 64)
+    return cfg.replace(**kw)

@@ -1,0 +1,25 @@
+"""hymba-1.5b — hybrid-head: parallel attention + mamba heads per layer.
+
+[arXiv:2411.13676] 32L, d_model=1600, 25 heads (GQA kv=5), d_ff=5504,
+vocab=32001, ssm_state=16. Attention side uses a sliding window (Hymba uses
+global attention only in 3 layers; we model the SWA majority and note the
+simplification in DESIGN.md), so long_500k runs.
+"""
+from repro.configs.base import MIXER_HYBRID, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attn_type=MIXER_HYBRID,
+    window=1024,
+    ssm_state=16,
+    num_meta_tokens=128,
+    source="Hymba [arXiv:2411.13676]",
+)

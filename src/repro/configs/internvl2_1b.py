@@ -1,0 +1,26 @@
+"""internvl2-1b — VLM: InternViT vision encoder (stub) + Qwen2-0.5B backbone.
+
+[arXiv:2404.16821] 24L, d_model=896, 14 heads (GQA kv=2), d_ff=4864,
+vocab=151655, QKV bias (Qwen2-style). input_specs() feeds precomputed patch
+embeddings (num_patch_tokens, d_model) per the assignment carve-out. Full
+attention => long_500k skipped.
+"""
+from repro.configs.base import ATTN_FULL, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    attn_type=ATTN_FULL,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    num_patch_tokens=256,
+    tie_embeddings=True,
+    source="InternVL2 [arXiv:2404.16821]",
+)

@@ -1,0 +1,20 @@
+"""rwkv6-7b — Finch: attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892] 32L, d_model=4096, d_ff=14336, vocab=65536. Head dim 64
+(=> 64 wkv heads). Serve state is O(1) in context length, so this arch runs
+the long_500k shape.
+"""
+from repro.configs.base import MIXER_RWKV6, ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_type=MIXER_RWKV6,
+    use_rope=False,
+    rwkv_head_dim=64,
+    source="Finch: RWKV-6 [arXiv:2404.05892]",
+)

@@ -1,0 +1,74 @@
+"""Startup profiling: estimate alpha_{i,k}, gamma_i, p_{i,j}.
+
+The paper profiles by running ~100 sampled requests (ShareGPT) through the
+pipeline on representative hardware. Here we execute the components' real
+code paths (JAX engine at laptop scale) or their calibrated cost models and
+fit the LP coefficients:
+
+  alpha_{i,k} = requests/s one unit of resource k sustains for component i
+  gamma_i     = mean(outputs per input) (amplification / abridgement)
+  p_{i,j}     = empirical branch frequencies from traces
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.graph import WorkflowGraph
+from repro.core.spec import meta_of
+from repro.data.workload import sample_request_features
+
+
+def profile_components(
+    components: Dict[str, object],
+    n_samples: int = 100,
+    seed: int = 0,
+    real_execution: bool = False,
+) -> None:
+    """Fill each component's meta.alpha from measured/estimated service time.
+
+    alpha_{i,k}: for the dominant resource, 1 unit sustains 1/mean_service
+    req/s; non-dominant resources contribute nothing by themselves (a
+    retriever can't run on a GPU) — matching the paper's heterogeneous,
+    multi-dimensional resource model.
+    """
+    rng = np.random.default_rng(seed)
+    for name, comp in components.items():
+        meta = meta_of(comp)
+        times = []
+        for _ in range(n_samples):
+            feats = sample_request_features(rng)
+            if real_execution and hasattr(comp, "_profile_run"):
+                t0 = time.perf_counter()
+                comp._profile_run(feats)
+                times.append(time.perf_counter() - t0)
+            else:
+                times.append(comp.estimate_time(feats))
+        mean_t = float(np.mean(times))
+        dom = meta.dominant_resource()
+        per_inst = meta.resources.get(dom, 1.0)
+        # one instance (= per_inst units of dom) sustains 1/mean_t req/s
+        meta.alpha = {dom: (1.0 / mean_t) / per_inst}
+        meta.mean_service_s = mean_t
+
+
+def profile_routing(graph: WorkflowGraph, traces: List[List[str]]) -> None:
+    """Update p_ij and recursion marks from execution traces."""
+    graph.update_from_traces(traces)
+
+
+def estimate_gamma(traces: List[List[str]]) -> Dict[str, float]:
+    """gamma_i = mean number of invocations of each component per request
+    (amplification > 1 for recursive stages)."""
+    counts: Dict[str, List[int]] = {}
+    for tr in traces:
+        per: Dict[str, int] = {}
+        for c in tr:
+            per[c] = per.get(c, 0) + 1
+        for c, n in per.items():
+            counts.setdefault(c, []).append(n)
+    n_req = max(len(traces), 1)
+    return {c: sum(v) / n_req for c, v in counts.items()}

@@ -1,0 +1,37 @@
+"""Deadline-aware scheduling: EDF-with-slack queue ordering.
+
+Requests with the least remaining slack get elevated priority; the priority
+is also propagated to the managed communication layer (StreamingObject
+chunks are flushed in priority order). Baseline engines use FIFO.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.simcluster import Task
+
+
+class QueuePolicy:
+    name = "fifo"
+
+    def pop(self, queue: List[Task], now: float) -> Optional[Task]:
+        if not queue:
+            return None
+        return queue.pop(0)
+
+
+class EDFSlack(QueuePolicy):
+    """Least-slack-first. Task.priority is the predicted slack (seconds);
+    ties broken by arrival order to avoid starvation churn."""
+
+    name = "edf_slack"
+
+    def pop(self, queue: List[Task], now: float) -> Optional[Task]:
+        if not queue:
+            return None
+        best = min(range(len(queue)), key=lambda i: (queue[i].priority, queue[i].enqueued_at))
+        return queue.pop(best)
+
+
+def make_policy(name: str) -> QueuePolicy:
+    return EDFSlack() if name == "edf_slack" else QueuePolicy()

@@ -1,0 +1,92 @@
+"""Workload generation: Poisson arrivals + request feature distributions.
+
+Mirrors the paper's setup: LMSYS-Chat-1M-like prompt/response lengths,
+retrieval depth k ~ U(100, 300) (per prior work), and a query-complexity
+mix driving Adaptive-RAG's three paths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+
+def sample_request_features(rng: np.random.Generator) -> Dict[str, float]:
+    return {
+        "tokens_in": float(np.clip(rng.lognormal(4.5, 0.8), 8, 2048)),   # ~90 median
+        "tokens_out": float(np.clip(rng.lognormal(4.8, 0.7), 8, 1024)),  # ~120 median
+        "k_docs": float(rng.integers(100, 301)),
+        "complexity": float(rng.random()),
+        "iteration": 0.0,
+    }
+
+
+@dataclass
+class ArrivalProcess:
+    """Poisson arrival process over a virtual clock."""
+
+    rate: float                      # requests / second
+    duration_s: float
+    seed: int = 0
+
+    def arrivals(self) -> List[float]:
+        rng = np.random.default_rng(self.seed)
+        t, out = 0.0, []
+        while True:
+            t += rng.exponential(1.0 / self.rate)
+            if t > self.duration_s:
+                break
+            out.append(t)
+        return out
+
+
+def make_workload(rate: float, duration_s: float, seed: int = 0):
+    """Yields (arrival_time, features) tuples."""
+    rng = np.random.default_rng(seed + 1)
+    return [
+        (t, sample_request_features(rng))
+        for t in ArrivalProcess(rate, duration_s, seed).arrivals()
+    ]
+
+
+# ---------------------------------------------------------------------------
+# synthetic corpus + token pipeline (training substrate)
+# ---------------------------------------------------------------------------
+
+
+def synthetic_corpus(n_docs: int, dim: int, seed: int = 0) -> np.ndarray:
+    """Clustered document embeddings (so IVF probing is meaningful)."""
+    rng = np.random.default_rng(seed)
+    n_topics = max(8, n_docs // 64)
+    topics = rng.standard_normal((n_topics, dim)).astype(np.float32)
+    assign = rng.integers(0, n_topics, n_docs)
+    emb = topics[assign] + 0.3 * rng.standard_normal((n_docs, dim)).astype(np.float32)
+    return emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-6)
+
+
+class TokenDataset:
+    """Deterministic synthetic LM dataset with enough structure to show a
+    decreasing training loss (Zipfian unigrams + bigram correlations)."""
+
+    def __init__(self, vocab: int, seq_len: int, seed: int = 0):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.seed = seed
+        rng = np.random.default_rng(seed)
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        self.unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self.shift = int(rng.integers(1, max(vocab // 2, 2)))
+
+    def batches(self, batch_size: int, n_batches: int) -> Iterator[np.ndarray]:
+        rng = np.random.default_rng(self.seed + 1)
+        for _ in range(n_batches):
+            first = rng.choice(self.vocab, size=(batch_size, 1), p=self.unigram)
+            toks = [first]
+            for t in range(1, self.seq_len):
+                prev = toks[-1]
+                follow = (prev + self.shift) % self.vocab
+                rnd = rng.choice(self.vocab, size=prev.shape, p=self.unigram)
+                use_bigram = rng.random(prev.shape) < 0.5
+                toks.append(np.where(use_bigram, follow, rnd))
+            yield np.concatenate(toks, axis=1).astype(np.int32)

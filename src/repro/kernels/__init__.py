@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit VMEM BlockSpecs),
+ops.py (jit'd wrappers), ref.py (pure-jnp oracles). Validated in
+interpret mode on CPU; set REPRO_PALLAS_INTERPRET=0 on real TPUs.
+"""

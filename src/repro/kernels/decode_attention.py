@@ -1,0 +1,100 @@
+"""Pallas TPU GQA decode-attention kernel (the serving hot loop).
+
+One new token attends a seq_len KV cache: HBM-bandwidth-bound. Grid
+(B*KVH, n_kv_blocks): each cell streams one KV block into VMEM, scores all G
+group queries of that kv head against it (G x block_k tile on the MXU), and
+maintains the online softmax in VMEM scratch. The cache is read exactly once
+— the roofline-optimal traffic pattern.
+
+Validity (cache slots filled so far) comes from a per-row length input.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, block_k: int, nkv: int, scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)   # (G, hd)
+    k = k_ref[0].astype(jnp.float32)   # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)   # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                           # (G, bk)
+    valid_len = len_ref[0]
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q, k_cache, v_cache, lengths, *, block_k: int = 512, scale=None,
+    interpret: bool = True,
+):
+    """q: (B, H, hd); k/v_cache: (B, Sc, KVH, hd); lengths: (B,) valid slots.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    Sc, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_k = min(block_k, Sc)
+    while Sc % block_k:
+        block_k //= 2
+    nkv = Sc // block_k
+
+    qf = q.reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KVH, Sc, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KVH, Sc, hd)
+    lens = jnp.asarray(lengths, jnp.int32).reshape(B)
+    lens_rep = jnp.repeat(lens, KVH)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, nkv=nkv, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KVH, nkv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens_rep, qf, kf, vf)
+    return out.reshape(B, KVH * G, hd)

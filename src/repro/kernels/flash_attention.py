@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Grid (B*H, nq, nkv): the KV dimension is the minor-most grid axis, so the
+online-softmax accumulators live in VMEM scratch and persist across the kv
+steps of one (head, q-block) cell — the canonical TPU flash pattern. Blocks
+are MXU-aligned (block_q x head_dim and block_k x head_dim tiles); the score
+tile (block_q x block_k) stays in VMEM in f32.
+
+GQA is handled in the index map: query row b*H+h reads KV row
+b*KVH + h // (H // KVH).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, block_q: int, block_k: int, nkv: int, scale: float,
+                  causal: bool):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal block-level skip: kv block entirely in the future contributes 0
+    run = (not causal) or (j * block_k <= i * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)            # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                    # (bq, bk)
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])              # (bq, bk)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(j == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 256, block_k: int = 256,
+    scale=None, interpret: bool = True,
+):
+    """q: (B, S, H, hd); k/v: (B, S, KVH, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    while S % block_q:
+        block_q //= 2
+    while S % block_k:
+        block_k //= 2
+    nq, nkv = S // block_q, S // block_k
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+
+    def kv_row(bh):
+        return (bh // H) * KVH + (bh % H) // G
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, nkv=nkv, scale=scale,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (kv_row(b), j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (kv_row(b), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; the model
+code paths independently validate against repro.models.attention (which is
+itself checked against a naive softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale=None):
+    """q: (B,S,H,hd); k/v: (B,S,KVH,hd)."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KVH, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o.reshape(B, S, H, hd)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, scale=None):
+    """q: (B,H,hd); caches: (B,Sc,KVH,hd); lengths: (B,)."""
+    B, H, hd = q.shape
+    Sc, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(Sc)[None] < jnp.asarray(lengths)[:, None]  # (B,Sc)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, H, hd)
+
+
+def rwkv6_ref(r, k, v, w, u, state0=None):
+    """Sequential WKV oracle. r,k,v,w: (B,S,H,hd); u: (H,hd).
+    Returns (y f32, final state (B,H,hd,hd) f32)."""
+    B, S, H, hd = r.shape
+    state = (
+        jnp.zeros((B, H, hd, hd), jnp.float32) if state0 is None else state0
+    )
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    ys = []
+    for t in range(S):
+        kt, vt, rt, wt = k[:, t], v[:, t], r[:, t], w[:, t]  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        ys.append(y)
+        state = wt[..., :, None] * state + kv
+    return jnp.stack(ys, axis=1), state
+
+
+def topk_retrieval_ref(queries, docs, k: int = 16):
+    scores = (queries.astype(jnp.float32) @ docs.astype(jnp.float32).T)
+    vals, ids = jax.lax.top_k(scores, k)
+    return vals, ids.astype(jnp.int32)
+
+
+def ssm_scan_ref(dt, x, bm, cm, a_log):
+    """Sequential selective-scan oracle. dt/x: (B,S,Di); bm/cm: (B,S,N)."""
+    import numpy as np
+
+    B, S, Di = dt.shape
+    N = bm.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    h = jnp.zeros((B, Di, N), jnp.float32)
+    ys = []
+    dt, x, bm, cm = (t.astype(jnp.float32) for t in (dt, x, bm, cm))
+    for t in range(S):
+        dA = jnp.exp(dt[:, t][:, :, None] * a[None])
+        h = dA * h + (dt[:, t] * x[:, t])[:, :, None] * bm[:, t][:, None, :]
+        ys.append(jnp.einsum("bdn,bn->bd", h, cm[:, t]))
+    return jnp.stack(ys, axis=1), h

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: RWKV-6 chunked WKV recurrence (data-dependent decay).
+
+TPU adaptation of the Finch recurrence (DESIGN.md §hardware-adaptation): no
+warp-level shuffles exist, so instead of a per-timestep warp scan the kernel
+uses the chunked-parallel linear-attention form — intra-chunk work becomes
+MXU matmuls and the (hd x hd) state matrix lives in VMEM scratch across the
+sequential chunk grid axis:
+
+  cum_t = prod_{tau<=t} w_tau            (per-chunk cumulative decay)
+  r~_t = r_t * cum_{t-1} ;  k~_t = k_t / cum_t
+  y_t = r~_t S_0 + [tril(r~ k~^T, -1) + diag(r_t.u.k_t)] V
+  S_C = diag(cum_C) (S_0 + k~^T V)
+
+Chunk length is bounded (default 32) so 1/cum stays finite in f32 (decay is
+w in (0,1); the oracle check sweeps adversarial decays).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final_ref, s_ref,
+                *, chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)  # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)  # (C, hd) decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)  # (1, hd) bonus
+
+    log_w = jnp.log(jnp.maximum(w, 1e-20))
+    cum = jnp.exp(jnp.cumsum(log_w, axis=0))          # (C, hd) inclusive
+    cum_prev = cum / w                                 # cum_{t-1}
+
+    r_t = r * cum_prev                                 # r~
+    k_t = k / cum                                      # k~
+
+    s0 = s_ref[...]                                    # (hd, hd) key x value
+    y_inter = jax.lax.dot_general(
+        r_t, s0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (C, hd_v)
+
+    scores = jax.lax.dot_general(
+        r_t, k_t, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(ti > tj, scores, 0.0)           # strict lower triangle
+    diag = jnp.sum(r * u * k, axis=1)                  # (C,) bonus term
+    y_intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + diag[:, None] * v
+
+    o_ref[0] = (y_inter + y_intra).astype(o_ref.dtype)
+
+    ktv = jax.lax.dot_general(
+        k_t, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (hd, hd)
+    s_ref[...] = cum[-1][:, None] * (s0 + ktv)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_state():
+        s_final_ref[0] = s_ref[...]
+
+
+def rwkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 32,
+                  interpret: bool = True):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd). Returns (y (B,S,H,hd) f32,
+    final state (B,H,hd,hd) f32). state0 must be zero (chunked form folds the
+    initial state into chunk 0; the serving engine passes zero at prefill)."""
+    B, S, H, hd = r.shape
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    rf, kf, vf, wf = map(flat, (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, s_final.reshape(B, H, hd, hd)

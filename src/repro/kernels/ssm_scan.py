@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: chunked selective-state-space scan (Mamba/Hymba).
+
+    h_t = exp(dt_t * A) . h_{t-1} + (dt_t * x_t) B_t ;   y_t = C_t . h_t
+
+TPU adaptation: the recurrence runs as an in-VMEM sequential loop per chunk
+— unlike a warp-shuffle GPU scan, the TPU win is bandwidth, not parallelism:
+dt/x/B/C stream through VMEM once and the O(S*Di*N) discretization exp(dt*A)
+is never materialized in HBM (6.7 GiB/device at prefill_32k if it were).
+A cumprod closed form would be faster intra-chunk but overflows f32 for
+strong decays (exp(+|dt*A|*chunk)); the sequential form is exact. Grid
+(B, Di-blocks, chunks) with the (di_blk, N) state resident in VMEM scratch
+across the chunk axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_final_ref, h_ref,
+                *, chunk: int, n_chunks: int, n_state: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dt = dt_ref[0].astype(jnp.float32)       # (C, dib)
+    x = x_ref[0].astype(jnp.float32)         # (C, dib)
+    bm = b_ref[0].astype(jnp.float32)        # (C, N)
+    cm = c_ref[0].astype(jnp.float32)        # (C, N)
+    a = a_ref[...].astype(jnp.float32)       # (dib, N)
+
+    def step(t, carry):
+        h, y = carry
+        dA_t = jnp.exp(dt[t][:, None] * a)               # (dib, N)
+        h = dA_t * h + (dt[t] * x[t])[:, None] * bm[t][None, :]
+        y = y.at[t].set(jnp.sum(h * cm[t][None, :], axis=1))
+        return h, y
+
+    y0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_ref[...], y0))
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_ref[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        h_final_ref[0] = h_ref[...]
+
+
+def ssm_scan(dt, x, bm, cm, a_log, *, chunk: int = 32, di_block: int = 256,
+             interpret: bool = True):
+    """dt, x: (B, S, Di); bm, cm: (B, S, N); a_log: (Di, N) with A=-exp(a_log).
+    Returns (y (B, S, Di) f32, h_final (B, Di, N) f32)."""
+    B, S, Di = dt.shape
+    N = bm.shape[-1]
+    while S % chunk:
+        chunk //= 2
+    di_block = min(di_block, Di)
+    while Di % di_block:
+        di_block //= 2
+    n_chunks, n_di = S // chunk, Di // di_block
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks,
+                               n_state=N)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, n_di, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda b, j, c: (b, c, j)),
+            pl.BlockSpec((1, chunk, di_block), lambda b, j, c: (b, c, j)),
+            pl.BlockSpec((1, chunk, N), lambda b, j, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, j, c: (b, c, 0)),
+            pl.BlockSpec((di_block, N), lambda b, j, c: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda b, j, c: (b, c, j)),
+            pl.BlockSpec((1, di_block, N), lambda b, j, c: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Di), jnp.float32),
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di_block, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, bm, cm, a)
+    return y, h

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused dense-retrieval scoring + top-k.
+
+The Retriever's hot loop: query x corpus matmul fused with a running top-k
+merge, so the (N,) score vector never round-trips to HBM. Grid (B, n_blocks):
+each cell scores one corpus block (block_n x d tile on the MXU) and merges
+into a VMEM top-k accumulator via sort of (k + block_top) candidates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(q_ref, docs_ref, val_ref, idx_ref, vals_s, idx_s,
+                 *, k: int, block_n: int, n_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_s[...] = jnp.full_like(vals_s, NEG_INF)
+        idx_s[...] = jnp.full_like(idx_s, -1)
+
+    q = q_ref[...].astype(jnp.float32)        # (1, d) row
+    docs = docs_ref[...].astype(jnp.float32)  # (block_n, d)
+    scores = jax.lax.dot_general(
+        docs, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0]                                    # (block_n,)
+    ids = j * block_n + jax.lax.iota(jnp.int32, block_n)
+
+    # take block-local top-k, then merge with the running top-k
+    blk_vals, blk_arg = jax.lax.top_k(scores, k)
+    blk_ids = ids[blk_arg]
+    cand_vals = jnp.concatenate([vals_s[...], blk_vals])
+    cand_ids = jnp.concatenate([idx_s[...], blk_ids])
+    top_vals, top_arg = jax.lax.top_k(cand_vals, k)
+    vals_s[...] = top_vals
+    idx_s[...] = cand_ids[top_arg]
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        val_ref[0] = vals_s[...]
+        idx_ref[0] = idx_s[...]
+
+
+def topk_retrieval(queries, docs, k: int = 16, *, block_n: int = 1024,
+                   interpret: bool = True):
+    """queries: (B, d); docs: (N, d) -> (scores (B,k), ids (B,k))."""
+    B, d = queries.shape
+    N = docs.shape[0]
+    block_n = min(block_n, N)
+    while N % block_n:
+        block_n //= 2
+    n_blocks = N // block_n
+
+    kernel = functools.partial(_topk_kernel, k=k, block_n=block_n, n_blocks=n_blocks)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_n, d), lambda b, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, docs)
+    return vals, ids

@@ -1,0 +1,275 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, with NO device allocation (ShapeDtypeStruct stand-ins).
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, compile-time OOM, or unsupported collective fails here.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The first two lines of this file force 512 host devices BEFORE any jax
+import (jax locks the device count on first init). Do not move them.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, arch_runs_shape, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import model as M
+from repro.models import sharding as shd
+from repro.optim import AdamW
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def hlo_collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-operand sizes of collective ops in the optimized HLO.
+
+    Note: ops inside while-loop (lax.scan) bodies appear once in the text;
+    the roofline benchmark extrapolates per-layer collectives from unrolled
+    1- and 2-layer probes. Here we also report the raw one-body count.
+    """
+    per_op: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = \(?([^)]*?)\)? (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = sum(
+            _shape_bytes(sh.group(0)) for sh in _SHAPE_RE.finditer(shapes_str)
+        )
+        per_op[op] += nbytes
+        counts[op] += 1
+    return {"bytes_per_op": per_op, "counts": counts, "total_bytes": sum(per_op.values())}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_step(arch: str, shape_name: str, mesh, dtype: str = "bfloat16",
+               moe_mode: str = "tp", serve_shard: bool = False,
+               kv_int8: bool = False):
+    """Returns (jitted_fn, arg_specs) ready to .lower(*arg_specs)."""
+    cfg = get_arch(arch).replace(dtype=dtype, kv_cache_quant=kv_int8)
+    shape = get_shape(shape_name)
+    axis_sizes = mesh_axis_sizes(mesh)
+
+    params_abs = M.abstract_params(cfg)
+    pspecs = shd.param_pspecs(cfg, params_abs, axis_sizes, moe_mode=moe_mode,
+                              serve=serve_shard and shape.kind != "train")
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    batch_abs = M.input_specs(cfg, shape)
+    bspecs = shd.input_pspecs(cfg, shape, batch_abs, axis_sizes)
+
+    if shape.kind == "train":
+        # bf16 first moment for the 100B+ MoE archs (beyond-paper §Perf H1):
+        # halves the m-state, the last ~1 GiB/chip needed to fit v5e HBM
+        opt = AdamW(lr=3e-4, momentum_dtype="bfloat16" if cfg.is_moe else "float32")
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = shd.opt_state_pspecs(pspecs)
+        # microbatched gradient accumulation bounds remat-saved activation
+        # stacks (production-standard); the large MoE archs need microbatch
+        # size == 1 per device-row to fit the 16 GiB v5e HBM. Each microbatch
+        # must stay divisible by the batch axes (pod x data) or activations
+        # lose their batch sharding entirely.
+        nb = 1
+        for a in shd.batch_axes(axis_sizes):
+            nb *= axis_sizes[a]
+        ubatch = min(16 if cfg.is_moe else 8, max(shape.global_batch // nb, 1))
+        step = M.make_train_step(cfg, opt, microbatches=ubatch,
+                                 grad_shardings=ns(pspecs))
+        fn = jax.jit(
+            step,
+            in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_abs, opt_abs, batch_abs)
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            return M.prefill(cfg, params, batch)
+
+        # output cache must be sharded like the decode-time cache, else XLA
+        # materializes it replicated (10s of GiB at 32k contexts)
+        cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cspecs = shd.cache_pspecs(cfg, shape, cache_abs, axis_sizes)
+        logits_spec = P(shd.batch_axes(axis_sizes) if shape.global_batch > 1 else None, None)
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(ns(pspecs), ns(bspecs)),
+            out_shardings=(NamedSharding(mesh, logits_spec), ns(cspecs)),
+        )
+        return fn, (params_abs, batch_abs)
+
+    # decode: serve_step — ONE new token against a seq_len KV cache
+    cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cspecs = shd.cache_pspecs(cfg, shape, cache_abs, axis_sizes)
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos)
+
+    tok_spec = shd.input_pspecs(cfg, shape, {"tokens": tok_abs}, axis_sizes)["tokens"]
+    logits_spec = P(shd.batch_axes(axis_sizes) if shape.global_batch > 1 else None, None)
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(ns(pspecs), ns(cspecs), ns(tok_spec), NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, logits_spec), ns(cspecs)),
+        donate_argnums=(1,),
+    )
+    return fn, (params_abs, cache_abs, tok_abs, pos_abs)
+
+
+def dryrun(arch: str, shape_name: str, multi_pod: bool = False, verbose: bool = True,
+           moe_mode: str = "tp", serve_shard: bool = False,
+           kv_int8: bool = False) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if not arch_runs_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "reason": "full-attention arch skips long_500k (see DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh, shd.activation_mesh(mesh, moe_mode=moe_mode):
+        fn, arg_specs = build_step(arch, shape_name, mesh, moe_mode=moe_mode,
+                                   serve_shard=serve_shard, kv_int8=kv_int8)
+        lowered = fn.lower(*arg_specs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = hlo_collective_bytes(compiled.as_text())
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "hlo_flops_per_device": cost.get("flops", 0.0),
+        "hlo_bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collectives_raw": coll,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh={out['mesh']}: "
+              f"compile {out['compile_s']}s, "
+              f"args/device {mem.argument_size_in_bytes/2**30:.2f} GiB, "
+              f"temp/device {mem.temp_size_in_bytes/2**30:.2f} GiB")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  collectives (one scan-body): {coll['counts']} "
+              f"total={coll['total_bytes']/2**20:.1f} MiB")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, help="append results to this JSONL file")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert-parallel MoE sharding (beyond-paper)")
+    ap.add_argument("--serve-shard", action="store_true",
+                    help="TP-resident serving weights, no FSDP (beyond-paper)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache (beyond-paper)")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    results = []
+    failed = []
+    for a, s, mp in combos:
+        try:
+            r = dryrun(a, s, multi_pod=mp, moe_mode="ep" if args.moe_ep else "tp",
+                       serve_shard=args.serve_shard, kv_int8=args.kv_int8)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            r = {"arch": a, "shape": s, "mesh": "pod2x16x16" if mp else "16x16",
+                 "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+            print(f"[dryrun] {a} x {s} FAILED: {e}")
+            failed.append(r)
+        results.append(r)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+    ok = sum(1 for r in results if r["status"] == "OK")
+    skip = sum(1 for r in results if r["status"] == "SKIP")
+    print(f"\n[dryrun] {ok} OK, {skip} SKIP, {len(failed)} FAIL / {len(results)} total")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model").
+
+``make_production_mesh`` is a function (never a module-level constant) so that
+importing this module does not touch jax device state.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# v5e hardware constants for the roofline model
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+ICI_LINKS = 4                 # 2D torus: 4 links/chip (v5e)
+CHIP_HBM_BYTES = 16 * 2**30   # 16 GiB per chip

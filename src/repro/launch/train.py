@@ -1,0 +1,83 @@
+"""Training launcher: real training of a reduced/full model on this host, or
+the sharded train-step for the production mesh (see dryrun.py for lowering).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_arch, smoke_variant
+from repro.data.workload import TokenDataset
+from repro.models import init_params, make_train_step
+from repro.optim import AdamW, cosine_schedule
+
+
+def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+          lr: float = 3e-4, seed: int = 0, log_every: int = 10,
+          checkpoint: str = None, microbatches: int = 1):
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = smoke_variant(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{steps} steps @ batch={batch} seq={seq}")
+
+    opt = AdamW(lr=cosine_schedule(lr, warmup=max(steps // 20, 1), total=steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=microbatches))
+
+    ds = TokenDataset(cfg.vocab_size, seq, seed=seed)
+    losses = []
+    t0 = time.time()
+    for step, tokens in enumerate(ds.batches(batch, steps)):
+        batch_dict = {"tokens": jnp.asarray(tokens)}
+        if cfg.num_patch_tokens:
+            batch_dict["patch_embeds"] = jnp.zeros(
+                (batch, cfg.num_patch_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.is_encoder_decoder:
+            batch_dict["frames"] = jnp.zeros(
+                (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dict)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"  step {step:4d}  loss {loss:.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):.3f}  "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+    if checkpoint:
+        save_checkpoint(checkpoint, params, step=steps,
+                        metadata={"arch": cfg.name, "final_loss": losses[-1]})
+        print(f"[train] checkpoint -> {checkpoint}")
+    return losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+    losses = train(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                   args.lr, checkpoint=args.checkpoint,
+                   microbatches=args.microbatches)
+    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "training loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+from repro.models.model import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    make_train_step,
+    prefill,
+)
+
+__all__ = [
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "input_specs",
+    "loss_fn",
+    "make_train_step",
+    "prefill",
+]

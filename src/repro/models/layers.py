@@ -1,0 +1,185 @@
+"""Core building blocks shared by all 10 architectures.
+
+Parameters are plain nested dicts of jnp arrays; every leaf is created by
+``dense_init``/``scale_init`` so shapes and naming are uniform (the sharding
+policy in ``repro.models.sharding`` keys off these names).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (n, d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(shape, dtype):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones_init(shape, dtype):
+    return jnp.ones(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization (accumulate in f32, cast back)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    if x.dtype == jnp.float32:
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + eps) * scale
+    # bf16 path: accumulate the variance in f32 via the dot accumulator
+    # WITHOUT materializing an f32 copy of x (that copy otherwise becomes an
+    # f32 remat-carry stack of the whole residual stream)
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x, scale, num_groups: int, eps: float = 1e-5):
+    """Head-wise group norm (used by RWKV6's ln_x). x: (..., D)."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(*lead, d)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int):
+    """Whisper-style sinusoidal position embeddings."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# chunked scan with inner remat (recurrent-state training memory)
+# ---------------------------------------------------------------------------
+
+
+def chunked_scan(step, init, seq, length: int, chunk: int = 64):
+    """``lax.scan`` over time split into chunks with a remat'd inner scan.
+
+    A plain scan's backward saves the carry at every step (O(S) states); the
+    chunked form saves one carry per chunk and recomputes the inner steps,
+    so recurrent layers (RWKV6 wkv, Mamba selective scan) train with
+    O(S/chunk + chunk) state memory. Returns (final_carry, stacked_ys).
+    """
+    if length % chunk or length <= chunk:
+        return jax.lax.scan(step, init, seq)
+    n = length // chunk
+
+    reshaped = jax.tree.map(lambda t: t.reshape(n, chunk, *t.shape[1:]), seq)
+
+    @jax.checkpoint
+    def chunk_body(carry, chunk_seq):
+        return jax.lax.scan(step, carry, chunk_seq)
+
+    carry, ys = jax.lax.scan(chunk_body, init, reshaped)
+    ys = jax.tree.map(lambda t: t.reshape(n * chunk, *t.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "silu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {  # gelu mlp (whisper)
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "b_up": zeros_init((d_ff,), dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+        "b_down": zeros_init((d_model,), dtype),
+    }
+
+
+def apply_mlp(params, x, act: str):
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return {"table": dense_init(key, vocab, d_model, dtype, scale=0.02)}
+
+
+def embed_tokens(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params_embed, params_head, x, tied: bool):
+    if tied:
+        return x @ params_embed["table"].T
+    return x @ params_head["w"]

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer (Mixtral top-2, Llama-4 top-1 + shared expert).
+
+Dispatch is scatter-based (Megablocks-style) rather than the dense
+(tokens, experts, capacity) one-hot einsum: at the assigned shapes the dense
+dispatch tensor would be terabytes, while the scatter form is
+O(E * capacity * d_model). Expert FFNs run as a single batched einsum over
+the (E, C, D) dispatch buffer, so compiled FLOPs reflect *active* experts
+(times the capacity factor), which is what the MoE roofline term wants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mlp, dense_init, init_mlp
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": dense_init(ks[0], d, e, dtype, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32).astype(dtype) * (d ** -0.5),
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32).astype(dtype) * (d ** -0.5),
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32).astype(dtype) * (f ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f, "silu", dtype)
+    return p
+
+
+def expert_capacity(num_tokens: int, num_experts: int, top_k: int) -> int:
+    """Capacity-factor routing for large token counts; DROPLESS for small
+    ones (decode steps): capacity-dropping a decode token would make serving
+    outputs diverge from teacher-forced forward (and run-to-run)."""
+    if num_tokens <= 256:
+        return num_tokens  # worst case: every token routes to one expert
+    return max(1, int(num_tokens * top_k / num_experts * CAPACITY_FACTOR))
+
+
+def apply_moe(params, x, cfg, max_chunk_tokens: int = 8192):
+    """x: (B, S, D) -> (y, aux) where aux carries the load-balance loss.
+
+    Dispatch runs over token CHUNKS (<= max_chunk_tokens): the scatter that
+    builds the (E, C, D) capacity buffer does not partition under GSPMD, so
+    chunking bounds the replicated buffer to O(chunk) instead of O(B*S)
+    (at prefill_32k B*S is ~1M tokens — unchunked this materializes a
+    ~50 GiB/device scatter source). The chunk size also bounds the u32 index
+    grids GSPMD materializes when partitioning the scatter."""
+    B, S, D = x.shape
+    T_all = B * S
+    if T_all > max_chunk_tokens:
+        n_chunks = (T_all + max_chunk_tokens - 1) // max_chunk_tokens
+        while T_all % n_chunks:
+            n_chunks += 1
+        xc = x.reshape(n_chunks, T_all // n_chunks, 1, D)
+
+        def body(_, xi):
+            yi, auxi = _moe_chunk(params, xi, cfg)
+            return None, (yi, auxi)
+
+        _, (yc, auxc) = jax.lax.scan(body, None, xc)
+        return yc.reshape(B, S, D), jnp.mean(auxc)
+    return _moe_chunk(params, x, cfg)
+
+
+def _moe_chunk(params, x, cfg):
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    C = expert_capacity(T, E, K)
+
+    from repro.models.sharding import constrain
+
+    xt = constrain(x.reshape(T, D), "batch", None)
+    logits = constrain((xt @ params["router"]).astype(jnp.float32), "batch", None)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(logits, K)  # (T, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1).astype(x.dtype)  # renormalize over top-k
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (T, K, E)
+    flat_onehot = onehot.reshape(T * K, E)
+    pos_in_expert = (jnp.cumsum(flat_onehot, axis=0) - flat_onehot).reshape(T, K, E)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (T, K)
+    keep = pos < C  # dropped tokens beyond capacity get zero output
+
+    # scatter tokens into (E, C, D)
+    e_flat = expert_idx.reshape(-1)
+    p_flat = jnp.where(keep, pos, C).reshape(-1)  # OOB row C == drop
+    buf = jnp.zeros((E, C + 1, D), dtype=x.dtype)
+    src = jnp.repeat(xt, K, axis=0) if K > 1 else xt
+    src = constrain(src, "batch", None)
+    buf = buf.at[e_flat, p_flat].set(src, mode="drop")
+    dispatched = buf[:, :C]  # (E, C, D)
+
+    # batched expert FFN. TP baseline: capacity over batch axes, ffn over
+    # "model". EP (beyond-paper): the EXPERT dim shards over "model" — the
+    # dispatch resharding lowers to an all-to-all, expert matmuls are local.
+    from repro.models.sharding import moe_mode
+
+    if moe_mode() == "ep":
+        dispatched = constrain(dispatched, "expert", "batch", None)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", dispatched, params["w_up"])
+        h = constrain(h, "expert", "batch", None)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, D)
+        out_buf = constrain(out_buf, "expert", "batch", None)
+    else:
+        dispatched = constrain(dispatched, None, "batch", None)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", dispatched, params["w_up"])
+        h = constrain(h, None, "batch", "model")
+        out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, D)
+        out_buf = constrain(out_buf, None, "batch", None)
+
+    # gather back and combine over the K routes
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((E, 1, D), out_buf.dtype)], axis=1)
+    gathered = constrain(out_buf[e_flat, p_flat].reshape(T, K, D), "batch", None, None)
+    y = jnp.sum(gathered * gates[..., None], axis=1).reshape(B, S, D)
+
+    if "shared" in params:
+        y = y + apply_mlp(params["shared"], x, "silu")
+
+    # Switch-style load balance loss
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32), axis=(0, 1))  # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux_loss

@@ -1,0 +1,145 @@
+"""RWKV-6 (Finch) time-mixing and channel-mixing, pure-JAX path.
+
+Data-dependent decay linear attention [arXiv:2404.05892]:
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T            (per head, S in R^{hd x hd})
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(decay(x_t))) produced by a low-rank MLP (the "data
+dependent" part that distinguishes v6 from v5's static decay).
+
+The jnp path runs the recurrence as a ``lax.scan`` over time; the Pallas
+kernel (repro/kernels/rwkv6_scan.py) implements the chunked-parallel form
+for TPU and is checked against this module.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, group_norm, zeros_init
+
+MIX_LORA = 32      # ddlerp low-rank dim (TIME_MIX_EXTRA_DIM)
+DECAY_LORA = 64    # decay low-rank dim (TIME_DECAY_EXTRA_DIM)
+N_MIX = 5          # w, k, v, r, g
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    return {
+        # data-dependent token shift (ddlerp)
+        "mu_first": zeros_init((d,), dtype),
+        "mix_w1": dense_init(ks[0], d, N_MIX * MIX_LORA, dtype, scale=0.01),
+        "mix_w2": (jax.random.normal(ks[1], (N_MIX, MIX_LORA, d), jnp.float32) * 0.01).astype(dtype),
+        "mu_base": zeros_init((N_MIX, d), dtype),
+        # projections
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        # data-dependent decay
+        "decay_base": zeros_init((d,), dtype),
+        "decay_w1": dense_init(ks[7], d, DECAY_LORA, dtype, scale=0.01),
+        "decay_w2": dense_init(ks[8], DECAY_LORA, d, dtype, scale=0.01),
+        # per-head bonus u and output groupnorm
+        "u": zeros_init((h, hd), dtype),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def init_rwkv6_ffn(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": zeros_init((d,), dtype),
+        "mu_r": zeros_init((d,), dtype),
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent lerp between x and the shifted sequence.
+    x, x_prev: (B, S, D) -> five mixed streams (w, k, v, r, g)."""
+    xx = x_prev - x
+    xxx = x + xx * params["mu_first"]
+    lora = jnp.tanh(xxx @ params["mix_w1"])  # (B,S,5*MIX_LORA)
+    B, S, _ = x.shape
+    lora = lora.reshape(B, S, N_MIX, MIX_LORA)
+    mu = params["mu_base"] + jnp.einsum("bsnm,nmd->bsnd", lora, params["mix_w2"])
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * mu  # (B,S,5,D)
+    return [mixed[:, :, i, :] for i in range(N_MIX)]
+
+
+def _decay(params, xw):
+    w = params["decay_base"] + jnp.tanh(xw @ params["decay_w1"]) @ params["decay_w2"]
+    return jnp.exp(-jnp.exp(w.astype(jnp.float32)))  # (B,S,D) in (0,1)
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence. r,k,v,w: (B, S, H, hd); u: (H, hd);
+    state: (B, H, hd, hd) [key dim x value dim]. Returns (y, final_state)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    from repro.models.layers import chunked_scan
+
+    S = r.shape[1]
+    seq = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    state, ys = chunked_scan(step, state.astype(jnp.float32), seq, length=S)
+    return jnp.moveaxis(ys, 0, 1), state  # (B,S,H,hd), (B,H,hd,hd)
+
+
+def apply_rwkv6(params, x, cfg, x_prev_last=None, state=None, use_kernel=False):
+    """Time mixing. x: (B,S,D). For prefill/train x_prev is the shifted
+    sequence; for decode (S=1) pass ``x_prev_last`` (B,D) and ``state``.
+    Returns (out, (new_x_prev, new_state))."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((B, D), x.dtype)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+
+    xw, xk, xv, xr, xg = _ddlerp(params, x, x_prev)
+    r = (xr @ params["wr"]).reshape(B, S, H, hd)
+    k = (xk @ params["wk"]).reshape(B, S, H, hd)
+    v = (xv @ params["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ params["wg"])
+    w = _decay(params, xw).reshape(B, S, H, hd)
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    u = params["u"].astype(jnp.float32)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y, state = kops.rwkv6_chunked(r, k, v, w, u, state)
+    else:
+        y, state = wkv_scan(r, k, v, w, u, state)
+
+    y = group_norm(y.reshape(B, S, D).astype(x.dtype), params["ln_x"], H, eps=64e-5)
+    out = (y * g) @ params["wo"]
+    return out, (x[:, -1, :], state)
+
+
+def apply_rwkv6_ffn(params, x, x_prev_last=None):
+    """Channel mixing. Returns (out, new_x_prev)."""
+    B, S, D = x.shape
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((B, D), x.dtype)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * params["mu_k"]
+    xr = x + xx * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    return jax.nn.sigmoid(xr @ params["wr"]) * (k @ params["wv"]), x[:, -1, :]

@@ -1,0 +1,305 @@
+"""Sharding policy: parameter / activation / cache PartitionSpecs.
+
+Baseline policy (recorded as the paper-faithful deployment in EXPERIMENTS.md):
+  * weights: FSDP over "data" on the d_model-ish dim + tensor parallel over
+    "model" on the heads/d_ff/expert-ff dim; replicated over "pod".
+  * activations: batch over ("pod","data"); for batch-1 long-context decode
+    the KV/sequence dim shards over ("pod","data") instead (context parallel).
+  * any dim not divisible by its mesh axis is left unsharded (GSPMD would
+    pad, but keeping the policy explicit makes roofline accounting exact).
+
+Every rule keys off the parameter *name* (leaf path), which the init code
+keeps uniform across architectures.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# rules: regex on the dot-joined path -> tuple of per-dim axis roles
+# roles: "fsdp" (data axis), "tp" (model axis), None (replicated)
+_PARAM_RULES = [
+    (r"embed/table$", ("tp", "fsdp")),
+    (r"lm_head/w$", ("fsdp", "tp")),
+    (r"patch_proj/w$", ("fsdp", None)),
+    (r"frame_proj/w$", ("fsdp", None)),
+    (r"meta_tokens$", (None, "fsdp")),
+    # attention
+    (r"attn/w[qkv]$", ("fsdp", "tp")),
+    (r"attn/wo$", ("tp", "fsdp")),
+    (r"attn/b[qkv]$", (None,)),
+    # MLA
+    (r"attn/wq_a$", ("fsdp", None)),
+    (r"attn/wq_b$", (None, "tp")),
+    (r"attn/wkv_a$", ("fsdp", None)),
+    (r"attn/wkv_b$", (None, "tp")),
+    (r"attn/(q_norm|kv_norm)$", (None,)),
+    # mlp
+    (r"mlp/w_(gate|up)$", ("fsdp", "tp")),
+    (r"mlp/w_down$", ("tp", "fsdp")),
+    (r"mlp/b_up$", ("tp",)),
+    (r"mlp/b_down$", (None,)),
+    # moe
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w_(gate|up)$", (None, "fsdp", "tp")),
+    (r"moe/w_down$", (None, "tp", "fsdp")),
+    (r"moe/shared/w_(gate|up)$", ("fsdp", "tp")),
+    (r"moe/shared/w_down$", ("tp", "fsdp")),
+    # rwkv6
+    (r"rwkv/w[rkvg]$", ("fsdp", "tp")),
+    (r"rwkv/wo$", ("tp", "fsdp")),
+    (r"rwkv/mix_w1$", ("fsdp", None)),
+    (r"rwkv/mix_w2$", (None, None, "fsdp")),
+    (r"rwkv/decay_w1$", ("fsdp", None)),
+    (r"rwkv/decay_w2$", (None, "fsdp")),
+    (r"rwkv/u$", ("tp", None)),
+    (r"rwkv/(mu_first|decay_base|ln_x)$", (None,)),
+    (r"rwkv/mu_base$", (None, None)),
+    (r"rwkv_ffn/wk$", ("fsdp", "tp")),
+    (r"rwkv_ffn/wv$", ("tp", "fsdp")),
+    (r"rwkv_ffn/wr$", ("fsdp", "tp")),
+    (r"rwkv_ffn/(mu_k|mu_r)$", (None,)),
+    # ssm branch
+    (r"ssm/w_in$", ("fsdp", "tp")),
+    (r"ssm/conv_w$", (None, "tp")),
+    (r"ssm/conv_b$", ("tp",)),
+    (r"ssm/w_x$", ("tp", None)),
+    (r"ssm/w_dt$", (None, "tp")),
+    (r"ssm/dt_bias$", ("tp",)),
+    (r"ssm/A_log$", ("tp", None)),
+    (r"ssm/D$", ("tp",)),
+    (r"ssm/w_out$", ("tp", "fsdp")),
+    (r"gate_(attn|ssm)$", (None,)),
+    # norms & everything else: replicated
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _role_to_axis(role, dim, axis_sizes, axes_in_use):
+    if role is None:
+        return None
+    if role == "ep":  # expert dim over the model axis
+        if "model" in axes_in_use or dim % axis_sizes.get("model", 1) != 0:
+            return None
+        return "model"
+    if role == "fsdp":
+        # multi-pod: FSDP over (pod x data) — 32-way weight/optimizer-state
+        # sharding, halving per-chip argument bytes for the 100B+ MoE archs
+        if "pod" in axis_sizes:
+            nb = axis_sizes["pod"] * axis_sizes["data"]
+            if "data" not in axes_in_use and "pod" not in axes_in_use and dim % nb == 0:
+                return ("pod", "data")
+        axis = "data"
+    else:
+        axis = "model"
+    if axis in axes_in_use:
+        return None
+    if dim % axis_sizes.get(axis, 1) != 0:
+        return None  # explicit: don't rely on GSPMD padding
+    return axis
+
+
+def param_pspecs(cfg: ModelConfig, params_abstract, axis_sizes: Dict[str, int],
+                 moe_mode: str = "tp", serve: bool = False):
+    """PartitionSpec tree matching the params tree.
+
+    moe_mode="ep" (beyond-paper §Perf H2): expert weights shard the EXPERT
+    dim over "model" (requires num_experts %% model == 0) instead of the ffn
+    dim — expert compute becomes fully local and the dispatch lowers to an
+    all-to-all instead of per-step weight all-gathers.
+
+    serve=True (beyond-paper §Perf H3): drop the FSDP role entirely —
+    serving weights are TP-resident (checkpoint resharding at deployment),
+    eliminating the per-decode-step weight all-gather that otherwise
+    dominates the collective roofline term."""
+    ep = moe_mode == "ep" and cfg.num_experts and (
+        cfg.num_experts % axis_sizes.get("model", 1) == 0
+    )
+    rules = [(pat, roles, False) for pat, roles in _PARAM_RULES]
+    if ep:
+        # experts local to a model-axis shard; the ffn dim shards over data
+        # (so no weight dim needs a per-step all-gather; the w_down partial
+        # sums reduce over data with a tiny (E/16, C, D) all-reduce). These
+        # fsdp dims are gather-free, so serve-mode keeps them (exempt=True).
+        rules = [
+            (r"moe/w_(gate|up)$", ("ep", None, "fsdp"), True),
+            (r"moe/w_down$", ("ep", "fsdp", None), True),
+        ] + rules
+
+    def spec_for(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        in_stack = pstr.startswith(("blocks", "enc_blocks"))
+        for pat, roles, exempt in rules:
+            if re.search(pat, pstr):
+                if roles is None:
+                    roles = (None,) * (len(shape) - (1 if in_stack else 0))
+                if serve and not exempt:
+                    roles = tuple(None if r == "fsdp" else r for r in roles)
+                base = len(shape) - len(roles)
+                axes = [None] * base
+                used: set = set()
+                for i, role in enumerate(roles):
+                    ax = _role_to_axis(role, shape[base + i], axis_sizes, used)
+                    if ax:
+                        used.update(ax if isinstance(ax, tuple) else (ax,))
+                    axes.append(ax)
+                return P(*axes)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+def batch_axes(axis_sizes: Dict[str, int]) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in axis_sizes else ("data",)
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, specs_abstract, axis_sizes):
+    """PartitionSpecs for the model-input batch."""
+    baxes = batch_axes(axis_sizes)
+    n_batch = 1
+    for a in baxes:
+        n_batch *= axis_sizes[a]
+    B = shape.global_batch
+    bspec = baxes if B % n_batch == 0 else None
+
+    def spec_for(path, leaf):
+        return P(bspec, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, specs_abstract)
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, cache_abstract, axis_sizes):
+    """PartitionSpecs for the serve cache.
+
+    Batch-shard when the batch divides the (pod x data) axes; otherwise
+    context-parallel: shard the cache sequence dim over (pod x data)
+    (long_500k, batch=1)."""
+    baxes = batch_axes(axis_sizes)
+    n_batch = 1
+    for a in baxes:
+        n_batch *= axis_sizes[a]
+    B = shape.global_batch
+    batch_sharded = B % n_batch == 0
+    model = axis_sizes.get("model", 1)
+
+    def spec_for(path, leaf):
+        pstr = _path_str(path)
+        name = pstr.rsplit("/", 1)[-1]
+        shp = leaf.shape  # leading dim = layer-group stack G
+        axes = [None] * len(shp)
+        if batch_sharded:
+            axes[1] = baxes
+        if name in ("k", "v", "ck", "cv", "c_kv", "k_rope") and len(shp) >= 4:
+            # (G, B, Sc, ...): the cache sequence dim is the big one at 32k+
+            # contexts. Shard it over "model" when batch is sharded (kv heads
+            # rarely divide TP=16), or over the batch axes for batch=1
+            # long-context decode (context parallelism).
+            if batch_sharded:
+                if shp[2] % model == 0 and shp[2] >= model:
+                    axes[2] = "model"
+                elif name in ("k", "v", "ck", "cv") and len(shp) == 5 and shp[3] % model == 0:
+                    axes[3] = "model"
+            elif shp[2] % n_batch == 0:
+                axes[2] = baxes
+                if name in ("k", "v", "ck", "cv") and len(shp) == 5 and shp[3] % model == 0:
+                    axes[3] = "model"
+        if name == "state" and shp[2] % model == 0:  # rwkv (G,B,H,hd,hd)
+            axes[2] = "model"
+        if name == "h" and shp[2] % model == 0:  # ssm (G,B,Di,N)
+            axes[2] = "model"
+        if name in ("conv",) and shp[3] % model == 0:  # (G,B,K-1,Di)
+            axes[3] = "model"
+        if name in ("x_prev_att", "x_prev_ffn") and shp[2] % model == 0:
+            axes[2] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (MaxText-style)
+# ---------------------------------------------------------------------------
+# GSPMD propagation does not reliably reach inside scan + remat + custom_vjp
+# nests, so models call ``constrain(x, roles...)`` at key points. Outside an
+# ``activation_mesh`` context this is a no-op (CPU unit tests).
+
+from contextlib import contextmanager
+
+_CTX: Dict[str, Any] = {"mesh": None, "axis_sizes": None, "moe_mode": "tp"}
+
+
+@contextmanager
+def activation_mesh(mesh, moe_mode: str = "tp"):
+    old = dict(_CTX)
+    _CTX["mesh"] = mesh
+    _CTX["axis_sizes"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    _CTX["moe_mode"] = moe_mode
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def moe_mode() -> str:
+    return _CTX.get("moe_mode", "tp")
+
+
+def model_axis_size() -> int:
+    sizes = _CTX.get("axis_sizes")
+    return sizes.get("model", 1) if sizes else 1
+
+
+def constrain(x, *roles):
+    """roles per dim: "batch" | "model" | "seq" | None. Dims that don't
+    divide their axis stay unsharded (explicit policy, no GSPMD padding)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    sizes = _CTX["axis_sizes"]
+    baxes = batch_axes(sizes)
+    nb = 1
+    for a in baxes:
+        nb *= sizes[a]
+    axes = []
+    for dim, role in zip(x.shape, roles):
+        if role in ("batch", "seq"):
+            axes.append(baxes if dim % nb == 0 and dim > 1 else None)
+        elif role in ("model", "expert"):
+            if role == "expert" and _CTX.get("moe_mode") != "ep":
+                axes.append(None)
+                continue
+            axes.append("model" if dim % sizes.get("model", 1) == 0 else None)
+        else:
+            axes.append(None)
+    axes += [None] * (len(x.shape) - len(axes))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*axes))
+    )
+
+
+def opt_state_pspecs(param_specs):
+    """AdamW state mirrors the param sharding; step is replicated."""
+    return {
+        "step": P(),
+        "m": param_specs,
+        "v": param_specs,
+    }

@@ -1,0 +1,101 @@
+"""Selective SSM (Mamba-style) branch used by Hymba's hybrid heads.
+
+h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D * x_t
+with input-dependent dt, B, C (selectivity) and a causal depthwise conv
+front. State for serving: (conv tail, h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, zeros_init
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    di = d  # inner dim == d_model (Hymba's mamba heads mirror attention width)
+    n = cfg.ssm_state
+    kconv = cfg.ssm_conv
+    dt_rank = max(1, di // 64)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (kconv, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": zeros_init((di,), dtype),
+        "w_x": dense_init(ks[2], di, dt_rank + 2 * n, dtype),
+        "w_dt": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, conv_tail=None):
+    """x: (B, S, Di); w: (K, Di). conv_tail: (B, K-1, Di) carryover for decode.
+    Returns (y, new_tail)."""
+    K = w.shape[0]
+    if conv_tail is None:
+        conv_tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_tail, x], axis=1)  # (B, S+K-1, Di)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K)) + b
+    return y, xp[:, -(K - 1) :, :]
+
+
+def apply_ssm(params, x, cfg, conv_tail=None, h0=None, use_kernel=False):
+    """x: (B, S, D) -> (out, (new_conv_tail, h)). ``use_kernel`` routes the
+    recurrence through the Pallas chunked kernel (kernels/ssm_scan.py)."""
+    B, S, D = x.shape
+    n = cfg.ssm_state
+    di = D
+    dt_rank = max(1, di // 64)
+
+    xz = x @ params["w_in"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, new_tail = _causal_depthwise_conv(x_in, params["conv_w"], params["conv_b"], conv_tail)
+    x_c = jax.nn.silu(x_c)
+
+    dbc = x_c @ params["w_x"]  # (B,S,dt_rank+2n)
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ params["w_dt"] + params["dt_bias"])  # (B,S,Di)
+    Bm = dbc[..., dt_rank : dt_rank + n]  # (B,S,n)
+    Cm = dbc[..., dt_rank + n :]  # (B,S,n)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (Di,n)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+
+    if use_kernel and S > 1:
+        from repro.kernels import ops as kops
+
+        # kernel folds h0=0 (prefill); decode uses the jnp single-step path
+        y, h = kops.ssm_scan(dt, x_c, Bm, Cm, params["A_log"])
+        y = y.astype(x.dtype) + params["D"] * x_c
+        y = y * jax.nn.silu(z)
+        return y @ params["w_out"], (new_tail, h)
+
+    def step(h, inp):
+        # discretize per step INSIDE the scan: materializing exp(dt*A) for the
+        # whole sequence would be an O(S*Di*n) f32 tensor (6.7 GiB/device at
+        # prefill_32k)
+        dt_t, dtx_t, B_t, C_t = inp  # (B,Di), (B,Di), (B,n), (B,n)
+        dA_t = jnp.exp(dt_t[..., None] * A)  # (B,Di,n)
+        h = dA_t * h + dtx_t[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    from repro.models.layers import chunked_scan
+
+    seq = (
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis((dt * x_c).astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    h, ys = chunked_scan(step, h0, seq, length=S)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,Di)
+    y = y + params["D"] * x_c
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], (new_tail, h)

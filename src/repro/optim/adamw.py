@@ -1,0 +1,83 @@
+"""Pure-JAX optimizers (training substrate; no optax dependency)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    momentum_dtype: str = "float32"  # "bfloat16" halves first-moment memory
+
+    def init(self, params):
+        mdt = jnp.dtype(self.momentum_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        clip = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * clip
+            m = (self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g).astype(m.dtype)
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m.astype(jnp.float32) / (1 - self.b1 ** step.astype(jnp.float32))
+            vh = v / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+@dataclass(frozen=True)
+class sgd_momentum:
+    lr: float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(self, params, grads, state):
+        m = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32), state["m"], grads
+        )
+        params = jax.tree.map(lambda p, m: (p - self.lr * m).astype(p.dtype), params, m)
+        return params, {"m": m}

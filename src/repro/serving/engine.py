@@ -1,0 +1,183 @@
+"""Generation engine: continuous batching over the model zoo.
+
+Real JAX execution at laptop scale (smoke-size models on CPU); the cluster
+simulation calibrates its Generator cost model against this engine. The
+engine implements the standard serving loop:
+
+    submit(prompt) -> slot assignment -> prefill -> batched decode steps
+    with per-slot positions -> emit tokens until max_new/eos.
+
+Prompt lengths are bucketed (powers of two) to bound jit retraces.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.serving.sampler import sample_tokens
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray
+    max_new: int
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    slot: int = -1
+    pos: int = 0
+    done: bool = False
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+def _bucket(n: int) -> int:
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+class GenerationEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params=None,
+        max_batch: int = 4,
+        max_seq: int = 256,
+        seed: int = 0,
+        eos_token: int = -1,
+    ):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else init_params(cfg, key)
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_token = eos_token
+        self.cache = init_cache(cfg, max_batch, max_seq)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.waiting: List[Request] = []
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(seed + 1)
+        self._decode_jit = jax.jit(self._decode_fn)
+        self._prefill_jit: Dict[int, Any] = {}
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt, max_new: int = 16, temperature: float = 0.0) -> Request:
+        req = Request(self._next_id, np.asarray(prompt, np.int32), max_new, temperature)
+        req.submitted_at = time.monotonic()
+        self._next_id += 1
+        self.waiting.append(req)
+        return req
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        while (self.waiting or any(self.slots)) and max_steps:
+            self.step()
+            max_steps -= 1
+
+    # ------------------------------------------------------------ internals
+    def _decode_fn(self, params, cache, tokens, pos):
+        return decode_step(self.cfg, params, cache, tokens, pos)
+
+    def _prefill_one(self, req: Request, slot: int):
+        Lp = len(req.prompt)
+        bucket = min(_bucket(Lp), self.max_seq)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :Lp] = req.prompt[:bucket]
+        if bucket not in self._prefill_jit:
+
+            def pf(params, tokens):
+                logits, _, caches = forward(self.cfg, params, {"tokens": tokens}, want_cache=True)
+                return logits, caches
+
+            self._prefill_jit[bucket] = jax.jit(pf)
+        logits, pcache = self._prefill_jit[bucket](self.params, jnp.asarray(toks))
+        # write this request's cache into the batch cache at `slot`
+        self.cache = _merge_cache(self.cache, pcache, slot, self.max_seq)
+        req.slot = slot
+        req.pos = Lp
+        last = np.asarray(logits)[0, Lp - 1]
+        self._key, sk = jax.random.split(self._key)
+        tok = int(sample_tokens(sk, jnp.asarray(last[None]), req.temperature)[0])
+        self._emit(req, tok)
+
+    def step(self) -> Dict[int, List[int]]:
+        """One engine iteration: admit waiting requests, one batched decode."""
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None and self.waiting:
+                req = self.waiting.pop(0)
+                self.slots[slot] = req
+                self._prefill_one(req, slot)
+
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return {}
+
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for r in active:
+            tokens[r.slot, 0] = r.out_tokens[-1] if r.out_tokens else 0
+            pos[r.slot] = r.pos
+        logits, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos)
+        )
+        self.steps += 1
+        self._key, sk = jax.random.split(self._key)
+        emitted: Dict[int, List[int]] = {}
+        toks = sample_tokens(sk, logits, active[0].temperature)
+        toks = np.asarray(toks)
+        for r in list(active):
+            tok = int(toks[r.slot])
+            r.pos += 1
+            self._emit(r, tok)
+            emitted.setdefault(r.req_id, []).append(tok)
+            if r.done:
+                self.slots[r.slot] = None
+        return emitted
+
+    def _emit(self, req: Request, tok: int):
+        if req.first_token_at is None:
+            req.first_token_at = time.monotonic()
+        req.out_tokens.append(tok)
+        self.tokens_out += 1
+        if (
+            len(req.out_tokens) >= req.max_new
+            or tok == self.eos_token
+            or req.pos >= self.max_seq - 1
+        ):
+            req.done = True
+            req.finished_at = time.monotonic()
+            if req.slot >= 0 and self.slots[req.slot] is req:
+                self.slots[req.slot] = None
+
+
+def _merge_cache(batch_cache, one_cache, slot: int, max_seq: int):
+    """Write a B=1 prefill cache into batch slot `slot` (padding seq dims)."""
+
+    def merge(bc, oc):
+        if bc.ndim < 2:
+            return bc
+        # layouts: (G, B, ...) — batch axis 1
+        oc = oc.astype(bc.dtype)
+        pad = [(0, 0)] * oc.ndim
+        changed = False
+        for ax in range(2, oc.ndim):
+            if oc.shape[ax] != bc.shape[ax]:
+                pad[ax] = (0, bc.shape[ax] - oc.shape[ax])
+                changed = True
+        if changed:
+            oc = jnp.pad(oc, pad)
+        return bc.at[:, slot].set(oc[:, 0])
+
+    return jax.tree.map(merge, batch_cache, one_cache)

@@ -1,0 +1,179 @@
+"""Paged KV-cache manager (vLLM-style PagedAttention, TPU adaptation).
+
+The generation engine's contiguous per-slot cache wastes memory on short
+requests and fragments under continuous batching. The paged manager keeps a
+global pool of fixed-size blocks and a per-sequence block table; attention
+gathers a sequence's blocks on the fly. On TPU the gather is a cheap
+`jnp.take` along the block axis (XLA lowers it to dynamic-slice loops into
+VMEM), so the adaptation is table-driven gathers rather than CUDA
+page-table pointer chasing.
+
+Pool layout per layer-kind group (matching models.model.init_cache):
+    k/v: (G, n_blocks, block_size, KVH, hd)
+Block tables: (max_seqs, max_blocks_per_seq) int32, -1 = unallocated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedPool:
+    """Host-side allocator for one cache pool."""
+
+    n_blocks: int
+    block_size: int
+    free_list: List[int] = field(default_factory=list)
+    tables: Dict[int, List[int]] = field(default_factory=dict)  # seq -> blocks
+
+    def __post_init__(self):
+        if not self.free_list:
+            self.free_list = list(range(self.n_blocks))
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free_list)
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return (n_tokens + self.block_size - 1) // self.block_size
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_needed(n_tokens) <= self.n_free
+
+    def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
+        need = self.blocks_needed(n_tokens)
+        if need > self.n_free:
+            raise MemoryError(
+                f"paged pool exhausted: need {need} blocks, {self.n_free} free"
+            )
+        blocks = [self.free_list.pop() for _ in range(need)]
+        self.tables.setdefault(seq_id, []).extend(blocks)
+        return blocks
+
+    def extend_for(self, seq_id: int, new_len: int) -> Optional[int]:
+        """Ensure capacity for new_len tokens; returns a newly allocated
+        block id if one was needed."""
+        have = len(self.tables.get(seq_id, [])) * self.block_size
+        if new_len <= have:
+            return None
+        return self.allocate(seq_id, new_len - have)[0]
+
+    def free(self, seq_id: int):
+        self.free_list.extend(self.tables.pop(seq_id, []))
+
+    def table_array(self, seq_ids: List[int], max_blocks: int) -> np.ndarray:
+        out = np.full((len(seq_ids), max_blocks), -1, dtype=np.int32)
+        for i, sid in enumerate(seq_ids):
+            blocks = self.tables.get(sid, [])[:max_blocks]
+            out[i, : len(blocks)] = blocks
+        return out
+
+    def utilization(self) -> float:
+        return 1.0 - self.n_free / max(self.n_blocks, 1)
+
+
+# ---------------------------------------------------------------------------
+# device-side paged operations (pure JAX; jit-able)
+# ---------------------------------------------------------------------------
+
+
+def write_paged(pool_kv, block_table_row, pos, new_kv, block_size: int):
+    """Write one token's (G, KVH, hd) entry at absolute position ``pos`` for
+    the sequence whose blocks are ``block_table_row`` (max_blocks,) int32.
+
+    pool_kv: (G, n_blocks, block_size, KVH, hd)."""
+    blk_idx = block_table_row[pos // block_size]
+    off = pos % block_size
+    return pool_kv.at[:, blk_idx, off].set(new_kv.astype(pool_kv.dtype))
+
+
+def gather_paged(pool_kv, block_table_row, max_blocks: int):
+    """Materialize a sequence's contiguous cache view from its pages:
+    (G, max_blocks*block_size, KVH, hd). Unallocated pages read block 0 and
+    must be masked by validity downstream."""
+    safe = jnp.maximum(block_table_row[:max_blocks], 0)
+    gathered = jnp.take(pool_kv, safe, axis=1)  # (G, max_blocks, bs, KVH, hd)
+    G, nb, bs, KVH, hd = gathered.shape
+    return gathered.reshape(G, nb * bs, KVH, hd)
+
+
+def paged_validity(block_table_row, length, block_size: int, max_blocks: int):
+    """(max_blocks*block_size,) bool: slot is backed by a real page AND below
+    the sequence length."""
+    slots = jnp.arange(max_blocks * block_size)
+    backed = block_table_row[slots // block_size] >= 0
+    return backed & (slots < length)
+
+
+class PagedKVCache:
+    """End-to-end paged cache for one model: pools per layer-group position.
+
+    Usage (mirrors the engine's flow):
+        cache = PagedKVCache(cfg, n_blocks=256, block_size=16)
+        cache.admit(seq_id, prompt_len)              # host: allocate pages
+        cache.write_prefill(seq_id, k_entries)       # device: copy-in
+        kv, valid = cache.sequence_view(seq_id, length)
+        cache.release(seq_id)
+    """
+
+    def __init__(self, cfg, n_blocks: int = 256, block_size: int = 16,
+                 max_blocks_per_seq: int = 64):
+        from repro.models import transformer as tfm
+
+        self.cfg = cfg
+        self.block_size = block_size
+        self.max_blocks = max_blocks_per_seq
+        p = tfm.period(cfg)
+        G = cfg.num_layers // p
+        dtype = jnp.dtype(cfg.dtype)
+        self.pool = PagedPool(n_blocks, block_size)
+        self.k = jnp.zeros((G, n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim), dtype)
+        self.v = jnp.zeros_like(self.k)
+        self.lengths: Dict[int, int] = {}
+
+    # ----------------------------------------------------------- host side
+    def admit(self, seq_id: int, prompt_len: int) -> bool:
+        if not self.pool.can_allocate(prompt_len + self.block_size):
+            return False  # backpressure: engine keeps the request queued
+        self.pool.allocate(seq_id, prompt_len + self.block_size)
+        self.lengths[seq_id] = 0
+        return True
+
+    def release(self, seq_id: int):
+        self.pool.free(seq_id)
+        self.lengths.pop(seq_id, None)
+
+    # --------------------------------------------------------- device side
+    def write_token(self, seq_id: int, k_entry, v_entry):
+        """k/v_entry: (G, KVH, hd) for the next position of seq_id."""
+        pos = self.lengths[seq_id]
+        self.pool.extend_for(seq_id, pos + 1)
+        row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
+        self.k = write_paged(self.k, row, pos, k_entry, self.block_size)
+        self.v = write_paged(self.v, row, pos, v_entry, self.block_size)
+        self.lengths[seq_id] = pos + 1
+
+    def write_prefill(self, seq_id: int, k_seq, v_seq):
+        """k/v_seq: (G, Lp, KVH, hd) — bulk copy of a prefilled prompt."""
+        Lp = k_seq.shape[1]
+        row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
+        for t in range(Lp):  # host loop: prefill copy-in happens once/request
+            self.k = write_paged(self.k, row, t, k_seq[:, t], self.block_size)
+            self.v = write_paged(self.v, row, t, v_seq[:, t], self.block_size)
+        self.lengths[seq_id] = Lp
+
+    def sequence_view(self, seq_id: int) -> Tuple:
+        """Returns (k, v, valid): contiguous gathered view + validity mask."""
+        row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
+        k = gather_paged(self.k, row, self.max_blocks)
+        v = gather_paged(self.v, row, self.max_blocks)
+        valid = paged_validity(row, self.lengths[seq_id], self.block_size, self.max_blocks)
+        return k, v, valid
+
+    def utilization(self) -> float:
+        return self.pool.utilization()

@@ -1,0 +1,101 @@
+"""Dense vector retrieval in JAX (the Retriever component's engine).
+
+IVF-style index: corpus embeddings are k-means clustered; a query scores the
+``n_probe`` nearest clusters only. ``n_probe`` is the accuracy/latency knob
+reproducing the paper's Figure 4 (ChromaDB ``search_ef``): small probes are
+up to ~20x faster at k<<N with lower recall.
+
+The scoring + top-k hot loop can run through the Pallas fused kernel
+(repro/kernels/topk_retrieval.py) on TPU; the jnp path is the oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kmeans(key, data: jnp.ndarray, n_clusters: int, iters: int = 8):
+    """Lightweight k-means (enough to make probing meaningful)."""
+    n = data.shape[0]
+    idx = jax.random.choice(key, n, (n_clusters,), replace=False)
+    centroids = data[idx]
+    for _ in range(iters):
+        assign = jnp.argmax(data @ centroids.T, axis=1)
+        sums = jax.ops.segment_sum(data, assign, num_segments=n_clusters)
+        counts = jax.ops.segment_sum(jnp.ones((n,)), assign, num_segments=n_clusters)
+        centroids = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids
+        )
+        centroids = centroids / (jnp.linalg.norm(centroids, axis=1, keepdims=True) + 1e-6)
+    return centroids, jnp.argmax(data @ centroids.T, axis=1)
+
+
+@dataclass
+class VectorIndex:
+    embeddings: jnp.ndarray          # (N, d), L2-normalized
+    centroids: jnp.ndarray           # (C, d)
+    cluster_of: jnp.ndarray          # (N,)
+    cluster_members: jnp.ndarray     # (C, max_per) padded with -1
+    max_per: int
+
+    @staticmethod
+    def build(embeddings, n_clusters: int = 64, seed: int = 0) -> "VectorIndex":
+        embeddings = jnp.asarray(embeddings, jnp.float32)
+        embeddings = embeddings / (jnp.linalg.norm(embeddings, axis=1, keepdims=True) + 1e-6)
+        key = jax.random.PRNGKey(seed)
+        centroids, assign = kmeans(key, embeddings, n_clusters)
+        assign_np = np.asarray(assign)
+        buckets = [np.where(assign_np == c)[0] for c in range(n_clusters)]
+        max_per = max(max(len(b) for b in buckets), 1)
+        members = np.full((n_clusters, max_per), -1, dtype=np.int32)
+        for c, b in enumerate(buckets):
+            members[c, : len(b)] = b
+        return VectorIndex(embeddings, centroids, assign, jnp.asarray(members), max_per)
+
+    @property
+    def size(self) -> int:
+        return self.embeddings.shape[0]
+
+    def search(self, query, k: int = 10, n_probe: int = 4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """query: (d,) or (B, d). Returns (scores, doc_ids) top-k per query."""
+        q = jnp.atleast_2d(jnp.asarray(query, jnp.float32))
+        q = q / (jnp.linalg.norm(q, axis=1, keepdims=True) + 1e-6)
+        return _ivf_search(
+            q, self.embeddings, self.centroids, self.cluster_members, k, n_probe
+        )
+
+    def search_exact(self, query, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(query, jnp.float32))
+        q = q / (jnp.linalg.norm(q, axis=1, keepdims=True) + 1e-6)
+        scores = q @ self.embeddings.T
+        top = jax.lax.top_k(scores, k)
+        return top[0], top[1]
+
+
+@partial(jax.jit, static_argnums=(4, 5))
+def _ivf_search(q, embeddings, centroids, members, k: int, n_probe: int):
+    # pick clusters
+    c_scores = q @ centroids.T  # (B, C)
+    _, probe = jax.lax.top_k(c_scores, n_probe)  # (B, n_probe)
+    cand = members[probe].reshape(q.shape[0], -1)  # (B, n_probe*max_per)
+    cand_safe = jnp.maximum(cand, 0)
+    cand_emb = embeddings[cand_safe]  # (B, M, d)
+    scores = jnp.einsum("bd,bmd->bm", q, cand_emb)
+    scores = jnp.where(cand >= 0, scores, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    doc_ids = jnp.take_along_axis(cand, top_i, axis=1)
+    return top_s, doc_ids
+
+
+def recall_at_k(index: VectorIndex, queries, k: int, n_probe: int) -> float:
+    _, approx = index.search(queries, k=k, n_probe=n_probe)
+    _, exact = index.search_exact(queries, k=k)
+    hits = 0
+    for a, e in zip(np.asarray(approx), np.asarray(exact)):
+        hits += len(set(a.tolist()) & set(e.tolist()))
+    return hits / (len(queries) * k)

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture instantiates its REDUCED variant (2 layers,
+d_model<=512, <=4 experts) and runs one forward + one train step + one
+prefill/decode round-trip on CPU, asserting output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, smoke_variant
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_train_step,
+    prefill,
+)
+from repro.optim import sgd_momentum
+
+B, S = 2, 64
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.ones((B, S), jnp.int32)}
+    if cfg.num_patch_tokens:
+        batch = {
+            "tokens": jnp.ones((B, S - cfg.num_patch_tokens), jnp.int32),
+            "patch_embeds": jnp.zeros((B, cfg.num_patch_tokens, cfg.d_model)),
+        }
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke_params():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = smoke_variant(get_arch(name))
+            cache[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch, smoke_params):
+    cfg, params = smoke_params(arch)
+    logits, aux = forward(cfg, params, _batch(cfg))
+    n_text = S - (cfg.num_patch_tokens or 0)
+    assert logits.shape == (B, n_text, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+    # pad-vocab logits masked to -inf
+    if cfg.padded_vocab != cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size :].max()) < -1e20
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step(arch, smoke_params):
+    cfg, params = smoke_params(arch)
+    opt = sgd_momentum(lr=1e-2)
+    step = jax.jit(make_train_step(cfg, opt))
+    params2, _, metrics = step(params, opt.init(params), _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+
+
+def _graft(dst, src):
+    pad = [(0, 0)] * src.ndim
+    for ax in range(src.ndim):
+        if src.shape[ax] != dst.shape[ax]:
+            pad[ax] = (0, dst.shape[ax] - src.shape[ax])
+    return jnp.pad(src, pad).astype(dst.dtype)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_roundtrip(arch, smoke_params):
+    """Prefill a 32-token prompt into a 64-slot cache, then decode one token
+    at position 32 (the serving engine's exact flow)."""
+    cfg, params = smoke_params(arch)
+    Sp = 32
+    batch = _batch(cfg)
+    batch = dict(batch, tokens=batch["tokens"][:, :Sp])
+    logits_p, pcache = prefill(cfg, params, batch)
+    assert logits_p.shape == (B, cfg.padded_vocab)
+    cache = jax.tree.map(_graft, init_cache(cfg, B, S), pcache)
+    tok = jnp.argmax(logits_p[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    n_prefix = (cfg.num_patch_tokens or 0) + (cfg.num_meta_tokens or 0)
+    logits_d, cache = decode_step(cfg, params, cache, tok, jnp.int32(Sp + n_prefix))
+    assert logits_d.shape == (B, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits_d).any())
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_forward(arch, smoke_params):
+    """Teacher-forced decode over a short prompt must reproduce forward
+    logits step by step (the KV-cache correctness contract)."""
+    cfg, params = smoke_params(arch)
+    if cfg.num_patch_tokens or cfg.is_encoder_decoder or cfg.num_meta_tokens:
+        pytest.skip("prefix-token archs checked via prefill roundtrip")
+    Sp = 16
+    toks = (jnp.arange(B * Sp).reshape(B, Sp) % (cfg.vocab_size - 1)).astype(jnp.int32)
+    full_logits, _ = forward(cfg, params, {"tokens": toks})
+    # prefill the first Sp-1 tokens, then decode token Sp-1 and compare
+    _, _, caches = forward(cfg, params, {"tokens": toks[:, : Sp - 1]}, want_cache=True)
+    cache = jax.tree.map(_graft, init_cache(cfg, B, Sp), caches)
+    logits_d, _ = decode_step(cfg, params, cache, toks[:, Sp - 1 :], jnp.int32(Sp - 1))
+    ref = full_logits[:, Sp - 1]
+    err = float(jnp.abs(logits_d - ref).max())
+    assert err < 2e-2, f"decode/forward mismatch {err}"
+
+
+def test_int8_kv_cache_decode_close():
+    """Beyond-paper H3: int8 KV cache decode must stay close to bf16 decode."""
+    cfg = smoke_variant(get_arch("qwen2.5-3b"))
+    cfg_q = cfg.replace(kv_cache_quant=True, kv_quant_scale=0.02)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = (jnp.arange(B * 16).reshape(B, 16) % 100).astype(jnp.int32)
+    _, _, caches = forward(cfg, params, {"tokens": toks[:, :15]}, want_cache=True)
+    cache = jax.tree.map(_graft, init_cache(cfg, B, 16), caches)
+    ref, _ = decode_step(cfg, params, cache, toks[:, 15:], jnp.int32(15))
+
+    _, _, caches_q = forward(cfg_q, params, {"tokens": toks[:, :15]}, want_cache=True)
+    cache_q = jax.tree.map(_graft, init_cache(cfg_q, B, 16), caches_q)
+    out, _ = decode_step(cfg_q, params, cache_q, toks[:, 15:], jnp.int32(15))
+    # logits agree to quantization tolerance; argmax unchanged
+    assert float(jnp.abs(out - ref).max()) < 1.0
+    assert bool((jnp.argmax(out, -1) == jnp.argmax(ref, -1)).all())

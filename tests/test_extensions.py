@@ -1,0 +1,204 @@
+"""Tests for the framework extensions: paged KV cache, telemetry, Graph-RAG,
+deployment config."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import make_app
+from repro.configs import get_arch, smoke_variant
+from repro.core.controller import PATCHWORK, PatchworkRuntime
+from repro.core.telemetry import Span, Telemetry
+from repro.data.workload import make_workload
+from repro.launch.deploy_config import load_deployment, run_deployment
+from repro.serving.paged_cache import PagedKVCache, PagedPool
+
+BUDGETS = {"GPU": 32, "CPU": 256, "RAM": 1024}
+
+
+# ---------------------------------------------------------------- paged cache
+
+
+def test_paged_pool_allocate_free():
+    pool = PagedPool(n_blocks=16, block_size=4)
+    blocks = pool.allocate(seq_id=1, n_tokens=10)  # 3 blocks
+    assert len(blocks) == 3 and pool.n_free == 13
+    pool.allocate(seq_id=2, n_tokens=4)
+    pool.free(1)
+    assert pool.n_free == 15
+    assert pool.utilization() == pytest.approx(1 / 16)
+
+
+def test_paged_pool_exhaustion():
+    pool = PagedPool(n_blocks=2, block_size=4)
+    assert not pool.can_allocate(100)
+    with pytest.raises(MemoryError):
+        pool.allocate(1, 100)
+
+
+def test_paged_cache_matches_contiguous_decode():
+    """Attention over the paged gathered view must equal attention over a
+    contiguous cache (the PagedAttention correctness contract)."""
+    from repro.models.attention import decode_attention
+
+    cfg = smoke_variant(get_arch("qwen2.5-3b"))
+    cache = PagedKVCache(cfg, n_blocks=32, block_size=4, max_blocks_per_seq=8)
+    G = cfg.num_layers
+    Lp = 10
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    k_seq = jax.random.normal(ks[0], (G, Lp, cfg.num_kv_heads, cfg.head_dim))
+    v_seq = jax.random.normal(ks[1], (G, Lp, cfg.num_kv_heads, cfg.head_dim))
+    assert cache.admit(7, Lp)
+    cache.write_prefill(7, k_seq, v_seq)
+    k_pg, v_pg, valid = cache.sequence_view(7)
+    assert int(valid.sum()) == Lp
+
+    q = jax.random.normal(ks[2], (1, 1, cfg.num_heads, cfg.head_dim))
+    out_paged = decode_attention(q, k_pg[0][None], v_pg[0][None], valid[None])
+    pad = k_pg.shape[1] - Lp
+    k_ct = jnp.pad(k_seq[0], ((0, pad), (0, 0), (0, 0)))[None]
+    v_ct = jnp.pad(v_seq[0], ((0, pad), (0, 0), (0, 0)))[None]
+    valid_ct = (jnp.arange(k_ct.shape[1]) < Lp)[None]
+    out_ct = decode_attention(q, k_ct, v_ct, valid_ct)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_ct),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_cache_incremental_writes():
+    cfg = smoke_variant(get_arch("smollm-135m"))
+    cache = PagedKVCache(cfg, n_blocks=16, block_size=4, max_blocks_per_seq=4)
+    assert cache.admit(1, 2)
+    G = cfg.num_layers
+    for t in range(6):  # crosses a block boundary
+        e = jnp.full((G, cfg.num_kv_heads, cfg.head_dim), float(t))
+        cache.write_token(1, e, e)
+    k, v, valid = cache.sequence_view(1)
+    assert int(valid.sum()) == 6
+    got = np.asarray(k[0, :6, 0, 0])
+    np.testing.assert_allclose(got, np.arange(6, dtype=np.float32))
+    cache.release(1)
+    assert cache.pool.n_free == cache.pool.n_blocks
+
+
+# ---------------------------------------------------------------- telemetry
+
+
+def test_telemetry_critical_path_and_queue_share():
+    t = Telemetry()
+    t.record_span(Span(1, "A", 0, enqueued=0.0, started=0.1, finished=0.2))
+    t.record_span(Span(1, "B", 1, enqueued=0.2, started=0.5, finished=0.6))
+    path = t.critical_path(1)
+    assert [c for c, _, _ in path] == ["A", "B"]
+    share = t.queue_time_share()
+    assert share["B"] > share["A"]  # B queued 3x longer than it served
+
+
+def test_telemetry_gauges_and_sparkline():
+    t = Telemetry()
+    for i in range(100):
+        t.gauge("q", float(i), float(i % 10))
+    stats = t.gauge_stats("q")
+    assert stats["max"] == 9.0 and stats["n"] == 100
+    line = t.ascii_sparkline("q", width=20)
+    assert len(line) <= 20 and line.strip()
+
+
+def test_runtime_populates_telemetry():
+    app = make_app("crag")
+    rt = PatchworkRuntime(app, BUDGETS, engine=PATCHWORK, slo_s=2.0, seed=0)
+    rt.run(make_workload(10, 8, seed=0))
+    assert rt.telemetry.spans, "spans recorded"
+    share = rt.telemetry.queue_time_share()
+    assert share and all(0.0 <= v <= 1.0 for v in share.values())
+    # every completed request has an extractable critical path
+    some_req = next(iter(rt.telemetry.spans))
+    assert rt.telemetry.critical_path(some_req)
+
+
+# ---------------------------------------------------------------- graph rag
+
+
+def test_graph_rag_runs_and_is_retrieval_heavy():
+    app = make_app("graphrag")
+    assert set(app.workflow_graph.component_names()) == {
+        "GRetriever", "GExpander", "GReranker", "GGenerator"}
+    rt = PatchworkRuntime(app, BUDGETS, engine=PATCHWORK, slo_s=3.0, seed=0)
+    m = rt.run(make_workload(16, 10, seed=0))
+    assert m.completed > 0
+    total = sum(m.comp_busy.values())
+    retrieval_side = (m.comp_busy.get("GRetriever", 0) + m.comp_busy.get("GExpander", 0))
+    assert retrieval_side / total > 0.3  # paper Fig. 3: Graph RAG retrieval-heavy
+
+
+def test_graph_expander_amplifies():
+    g = make_app("graphrag").workflow_graph
+    assert g.effective_gamma("GExpander") > 1.0
+
+
+# ---------------------------------------------------------------- deploy cfg
+
+
+def test_deploy_config_defaults_and_override():
+    cfg = load_deployment({"app": "crag", "engine": {"scheduler": "fifo"}})
+    assert cfg["app"] == "crag"
+    assert cfg["engine"]["scheduler"] == "fifo"
+    assert cfg["budgets"]["GPU"] == 32  # default preserved
+
+
+def test_deploy_config_rejects_unknown_engine_keys():
+    with pytest.raises(ValueError):
+        load_deployment({"engine": {"not_a_knob": 1}})
+
+
+def test_deploy_config_end_to_end(tmp_path):
+    import json as _json
+
+    path = tmp_path / "deploy.json"
+    path.write_text(_json.dumps({
+        "app": "vrag",
+        "workload": {"rate": 10.0, "duration_s": 5.0},
+        "slo_s": 2.0,
+    }))
+    rt, m = run_deployment(str(path))
+    assert m.completed > 20
+    assert rt.engine.name == "patchwork"
+
+
+# ---------------------------------------------------------------- streaming priority
+
+
+def test_priority_flusher_orders_by_slack():
+    from repro.core.streaming import PriorityFlusher, StreamingObject
+
+    fl = PriorityFlusher()
+    delivered = []
+    hi = StreamingObject(chunk_size=2, priority=0.1)   # low slack = urgent
+    lo = StreamingObject(chunk_size=2, priority=5.0)
+    fl.submit(lo, ["lo1"], lambda c: delivered.append(c[0]))
+    fl.submit(hi, ["hi1"], lambda c: delivered.append(c[0]))
+    fl.submit(lo, ["lo2"], lambda c: delivered.append(c[0]))
+    fl.flush()
+    assert delivered == ["hi1", "lo1", "lo2"]
+    assert fl.backlog == 0
+
+
+# ---------------------------------------------------------------- failover
+
+
+def test_instance_failure_recovery():
+    app = make_app("vrag")
+    rt = PatchworkRuntime(app, BUDGETS, engine=PATCHWORK, slo_s=5.0, seed=0)
+    wl = make_workload(20, 10, seed=0)
+
+    # kill a generator instance mid-run
+    victim = rt.instances["VGenerator"][0].instance_id
+
+    def sabotage():
+        rt.fail_instance("VGenerator", victim)
+
+    rt.clock.schedule(3.0, sabotage)
+    m = rt.run(wl)
+    assert getattr(m, "failovers", 0) == 1
+    # every offered request still completes (rescued tasks re-dispatched)
+    assert m.completed == m.offered
+    assert all(i.instance_id != victim for i in rt.instances["VGenerator"])

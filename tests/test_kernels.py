@@ -1,0 +1,140 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd", [
+    (1, 128, 2, 2, 64),     # MHA
+    (2, 256, 4, 2, 64),     # GQA 2:1
+    (1, 512, 8, 1, 128),    # MQA
+    (2, 192, 6, 3, 32),     # non-pow2 seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KVH, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("B,Sc,H,KVH,hd", [
+    (1, 256, 4, 4, 64),
+    (3, 512, 8, 2, 64),
+    (2, 384, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, Sc, H, KVH, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(Sc + H), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, Sc, KVH, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, Sc, KVH, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, Sc + 1)
+    out = ops.decode_attention(q, kc, vc, lengths, block_k=128)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 64, 2, 32, 16),
+    (2, 128, 2, 64, 32),
+    (1, 96, 4, 32, 32),    # S not a multiple of chunk -> halved chunk
+])
+def test_rwkv6_sweep(B, S, H, hd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    # realistic Finch decay: w = exp(-exp(z)), z ~ N(0, 0.5)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    y, state = ops.rwkv6_chunked(r, k, v, w, u, chunk=chunk)
+    y_ref, state_ref = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref), atol=2e-3, rtol=2e-3)
+
+
+def test_rwkv6_adversarial_decay():
+    """Strong decay stresses the 1/cum rescaling inside a chunk."""
+    B, S, H, hd = 1, 64, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    r = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    w = jnp.full((B, S, H, hd), 0.45)  # heavy decay
+    u = jnp.zeros((H, hd))
+    y, state = ops.rwkv6_chunked(r, k, v, w, u, chunk=16)
+    y_ref, state_ref = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-3, rtol=5e-3)
+
+
+@pytest.mark.parametrize("B,N,d,k,block_n", [
+    (1, 1024, 32, 8, 256),
+    (4, 4096, 64, 16, 512),
+    (2, 768, 128, 4, 256),  # non-pow2 N
+])
+def test_topk_retrieval_sweep(B, N, d, k, block_n):
+    ks = jax.random.split(jax.random.PRNGKey(N + d), 2)
+    q = jax.random.normal(ks[0], (B, d))
+    docs = jax.random.normal(ks[1], (N, d))
+    vals, ids = ops.topk_retrieval(q, docs, k=k, block_n=block_n)
+    vals_ref, ids_ref = ref.topk_retrieval_ref(q, docs, k=k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vals_ref), atol=1e-4, rtol=1e-4)
+    assert bool((ids == ids_ref).all())
+
+
+def test_flash_attention_noncausal():
+    B, S, H, hd = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,Di,N,chunk", [
+    (1, 64, 64, 8, 16),
+    (2, 128, 128, 16, 32),
+    (1, 96, 256, 16, 32),   # S not multiple of chunk -> halved
+])
+def test_ssm_scan_sweep(B, S, Di, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(S + Di), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, Di)) - 2.0)
+    x = jax.random.normal(ks[1], (B, S, Di))
+    bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    cm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N)))
+    y, h = ops.ssm_scan(dt, x, bm, cm, a_log, chunk=chunk, di_block=64)
+    y_ref, h_ref = ref.ssm_scan_ref(dt, x, bm, cm, a_log)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-3, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=3e-3, rtol=3e-3)
+
+
+def test_ssm_kernel_path_in_model():
+    """apply_ssm(use_kernel=True) must match the jnp scan path."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.models.ssm import apply_ssm, init_ssm
+
+    cfg = smoke_variant(get_arch("hymba-1.5b"))
+    params = init_ssm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.1
+    y1, (_, h1) = apply_ssm(params, x, cfg)
+    y2, (_, h2) = apply_ssm(params, x, cfg, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-3, rtol=2e-3)

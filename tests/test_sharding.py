@@ -1,0 +1,154 @@
+"""Sharding-policy unit tests (pure spec logic; no multi-device runtime)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, smoke_variant
+from repro.models import abstract_cache, abstract_params
+from repro.models.sharding import (
+    cache_pspecs,
+    input_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)
+
+AX = {"data": 16, "model": 16}
+AX_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def _leaves_with_specs(arch, axes):
+    cfg = get_arch(arch)
+    params = abstract_params(cfg)
+    specs = param_pspecs(cfg, params, axes)
+    return list(zip(jax.tree.leaves(params), jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))))
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "mixtral-8x22b", "rwkv6-7b",
+                                  "minicpm3-4b", "hymba-1.5b"])
+def test_param_specs_divisible(arch):
+    """Every sharded dim must divide its mesh axis size (explicit policy)."""
+    for leaf, spec in _leaves_with_specs(arch, AX):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= AX[a] if a in AX else 1
+            assert dim % n == 0, f"{arch}: dim {dim} not divisible for {spec}"
+
+
+def test_param_specs_structure_matches():
+    cfg = get_arch("qwen2.5-3b")
+    params = abstract_params(cfg)
+    specs = param_pspecs(cfg, params, AX)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_big_weights_are_sharded():
+    """No weight above 64MB may be fully replicated (memory sanity)."""
+    for leaf, spec in _leaves_with_specs("mixtral-8x22b", AX):
+        nbytes = leaf.size * 2  # bf16
+        if nbytes > 64 * 2**20:
+            assert any(a is not None for a in spec), f"{leaf.shape} replicated"
+
+
+def test_multipod_fsdp_expands():
+    """On the multi-pod mesh, fsdp dims shard over (pod, data)."""
+    found = False
+    for leaf, spec in _leaves_with_specs("mixtral-8x22b", AX_MP):
+        if any(isinstance(a, tuple) and set(a) == {"pod", "data"} for a in spec):
+            found = True
+    assert found
+
+
+def test_cache_specs_batch_vs_context_parallel():
+    cfg = get_arch("phi3-medium-14b")
+    cache = abstract_cache(cfg, SHAPES["decode_32k"].global_batch, 32768)
+    specs = cache_pspecs(cfg, SHAPES["decode_32k"], cache, AX)
+    k_spec = specs[0]["k"]
+    assert k_spec[1] in ("data", ("data",))  # batch sharded
+    assert k_spec[2] == "model"        # cache seq sharded over model
+
+    cfg2 = get_arch("mixtral-8x22b")
+    cache2 = abstract_cache(cfg2, 1, 524288)
+    specs2 = cache_pspecs(cfg2, SHAPES["long_500k"], cache2, AX)
+    k2 = specs2[0]["k"]
+    assert k2[1] is None               # batch=1: unsharded
+    assert k2[2] in ("data", ("data",))  # context parallel over seq
+
+
+def test_rwkv_state_sharded_over_heads():
+    cfg = get_arch("rwkv6-7b")
+    cache = abstract_cache(cfg, 128, 32768)
+    specs = cache_pspecs(cfg, SHAPES["decode_32k"], cache, AX)
+    assert specs[0]["state"][2] == "model"  # 64 heads % 16 == 0
+
+
+def test_opt_state_mirrors_params():
+    cfg = get_arch("smollm-135m")
+    params = abstract_params(cfg)
+    pspecs = param_pspecs(cfg, params, AX)
+    ospecs = opt_state_pspecs(pspecs)
+    assert ospecs["step"] == P()
+    assert jax.tree.structure(ospecs["m"], is_leaf=lambda x: isinstance(x, P)) == \
+        jax.tree.structure(pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_input_specs_batch_sharding():
+    cfg = get_arch("qwen2.5-3b")
+    from repro.models import input_specs
+
+    batch = input_specs(cfg, SHAPES["train_4k"])
+    specs = input_pspecs(cfg, SHAPES["train_4k"], batch, AX)
+    assert specs["tokens"][0] in ("data", ("data",))
+    # long_500k batch=1 cannot shard
+    batch2 = input_specs(cfg, SHAPES["long_500k"])
+    specs2 = input_pspecs(cfg, SHAPES["long_500k"], batch2, AX)
+    assert specs2["tokens"][0] is None
+
+
+def test_padded_vocab_multiple_of_128():
+    for name in ("internvl2-1b", "hymba-1.5b", "whisper-large-v3", "minicpm3-4b"):
+        cfg = get_arch(name)
+        assert cfg.padded_vocab % 128 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab - cfg.vocab_size < 128
+
+
+def test_ep_mode_shards_expert_dim():
+    cfg = get_arch("llama4-scout-17b-a16e")  # E=16 == model axis
+    params = abstract_params(cfg)
+    specs = param_pspecs(cfg, params, AX, moe_mode="ep")
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    found = False
+    for path, spec in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if "moe/w_gate" in pstr:
+            assert spec[1] == "model", spec  # (G, E, D, F): expert dim sharded
+            found = True
+    assert found
+
+
+def test_ep_mode_noop_when_indivisible():
+    cfg = get_arch("mixtral-8x22b")  # E=8 < model axis 16
+    params = abstract_params(cfg)
+    specs_tp = param_pspecs(cfg, params, AX, moe_mode="tp")
+    specs_ep = param_pspecs(cfg, params, AX, moe_mode="ep")
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: a == b, specs_tp, specs_ep,
+        is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_serve_mode_strips_fsdp():
+    cfg = get_arch("phi3-medium-14b")
+    params = abstract_params(cfg)
+    serve = param_pspecs(cfg, params, AX, serve=True)
+    flat = jax.tree_util.tree_flatten_with_path(serve)[0]
+    for path, spec in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if "attn/wq" in pstr or "mlp/w_gate" in pstr:
+            assert "data" not in tuple(spec), (pstr, spec)  # TP-resident
