@@ -55,6 +55,69 @@ def profile_components(
         meta.mean_service_s = mean_t
 
 
+def calibrate_generator_from_engine(
+    gen,
+    engine,
+    prefill_len: int = 64,
+    decode_tokens: int = 24,
+    long_ctx: int = 96,
+) -> Dict[str, float]:
+    """Refit a Generator's cost-model coefficients against a live engine
+    (the paged serving engine at laptop scale).
+
+    Measures: prefill s/token from a long-prompt/1-token request, the flat
+    decode s/token from a short-context decode run, the KV-read term from
+    the long-vs-short context decode delta, and the prefix hit rate from the
+    engine's shared-block counters. Returns the measured coefficients (also
+    written onto ``gen``)."""
+
+    salt = [0]
+
+    def timed(prompt_len: int, max_new: int) -> float:
+        # distinct prompt per measurement: an accidental prefix-cache hit
+        # would fake a near-zero prefill cost
+        salt[0] += 1
+        prompt = (np.arange(prompt_len) + salt[0] * 131) % 401
+        req = engine.submit(prompt, max_new=max_new)
+        t0 = time.perf_counter()
+        engine.run_until_done()
+        dt = time.perf_counter() - t0
+        assert req.done
+        return dt
+
+    pc = getattr(engine, "prefill_chunk_size", 0)
+
+    def eff(n: int) -> int:
+        # the paged engine pads every prompt to whole prefill chunks; subtract
+        # the chunk-quantized prefill cost or its residue leaks into the
+        # decode coefficients
+        return -(-n // pc) * pc if pc else n
+
+    timed(prefill_len, 2)  # warm up jit caches so compile never enters the fit
+    timed(8, decode_tokens)
+    t_prefill = timed(prefill_len, 1)
+    prefill_per_token = t_prefill / eff(prefill_len)
+
+    t_short = timed(8, decode_tokens)
+    t_long = timed(long_ctx, decode_tokens)
+    decode_short = max(t_short - eff(8) * prefill_per_token, 1e-9) / decode_tokens
+    decode_long = max(t_long - eff(long_ctx) * prefill_per_token, 1e-9) / decode_tokens
+    ctx_coeff = max(decode_long - decode_short, 0.0) / max(long_ctx - 8, 1)
+
+    stats = engine.stats()
+    seen = stats.get("prefix_hit_tokens", 0) + stats.get("prefill_tokens", 0)
+    hit_rate = stats.get("prefix_hit_tokens", 0) / seen if seen else 0.0
+
+    coeffs = {
+        "prefill_per_token_s": prefill_per_token,
+        "decode_per_token_s": decode_short,
+        "decode_cache_per_ctx_token_s": ctx_coeff,
+        "prefix_hit_rate": hit_rate,
+    }
+    gen.calibrate(coeffs)
+    return coeffs
+
+
 def profile_routing(graph: WorkflowGraph, traces: List[List[str]]) -> None:
     """Update p_ij and recursion marks from execution traces."""
     graph.update_from_traces(traces)

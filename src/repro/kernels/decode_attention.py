@@ -1,4 +1,4 @@
-"""Pallas TPU GQA decode-attention kernel (the serving hot loop).
+"""Pallas TPU GQA decode-attention kernels (the serving hot loop).
 
 One new token attends a seq_len KV cache: HBM-bandwidth-bound. Grid
 (B*KVH, n_kv_blocks): each cell streams one KV block into VMEM, scores all G
@@ -7,6 +7,14 @@ maintains the online softmax in VMEM scratch. The cache is read exactly once
 — the roofline-optimal traffic pattern.
 
 Validity (cache slots filled so far) comes from a per-row length input.
+
+``paged_decode_attention`` is the block-table variant backing the paged
+serving engine (vLLM-style PagedAttention): the KV pool is a global array of
+fixed-size blocks, and a scalar-prefetched per-sequence block table drives
+the BlockSpec index_map, so each grid cell DMAs exactly the physical block
+the logical position maps to — no contiguous cache materialization.
+``ref_paged_decode_attention`` is the jnp gather oracle the kernel (and the
+engine's XLA decode path) are checked against.
 """
 from __future__ import annotations
 
@@ -98,3 +106,132 @@ def decode_attention(
         interpret=interpret,
     )(lens_rep, qf, kf, vf)
     return out.reshape(B, KVH * G, hd)
+
+
+# ---------------------------------------------------------------------------
+# paged (block-table) decode attention
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, block_size: int, nkv: int,
+                         kvh: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    bb = b // kvh  # batch row (grid is B*KVH cells)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (G, bs)
+    # logical position of this block's slots = j*bs + offset; valid below the
+    # sequence length (length <= allocated blocks, so a clamped -1 table entry
+    # is always fully masked)
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[bb], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q, k_pool, v_pool, block_tables, lengths, *, scale=None,
+    interpret: bool = True,
+):
+    """Block-table-driven decode attention over a paged KV pool.
+
+    q: (B, H, hd); k/v_pool: (n_blocks, bs, KVH, hd) — ONE layer group's
+    global pool; block_tables: (B, max_blocks) int32 (-1 = unallocated);
+    lengths: (B,) valid tokens per sequence. Returns (B, H, hd).
+
+    Grid (B*KVH, max_blocks): the scalar-prefetched block table feeds the
+    K/V BlockSpec index_map, so each cell DMAs the one physical block its
+    logical block index maps to (unallocated entries clamp to block 0 and are
+    masked by the length check).
+    """
+    B, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    G = H // KVH
+    mb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32).reshape(B)
+
+    def q_map(b, j, tab_ref, len_ref):
+        return (b, 0, 0)
+
+    def kv_map(b, j, tab_ref, len_ref):
+        return (jnp.maximum(tab_ref[b // KVH, j], 0), 0, b % KVH, 0)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, block_size=bs, nkv=mb, kvh=KVH, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KVH, mb),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), q_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lens, qf, k_pool, v_pool)
+    return out.reshape(B, KVH * G, hd)
+
+
+def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, scale=None):
+    """jnp gather oracle: materialize each sequence's contiguous view from its
+    block table (jnp.take over the block axis) and run masked softmax
+    attention. This is also the numerics contract for the engine's XLA decode
+    path."""
+    B, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    mb = block_tables.shape[1]
+    tables = jnp.asarray(block_tables, jnp.int32)
+    safe = jnp.maximum(tables, 0)
+
+    def gather(pool):
+        g = jnp.take(pool, safe, axis=0)  # (B, mb, bs, KVH, hd)
+        return g.reshape(B, mb * bs, KVH, hd)
+
+    slots = jnp.arange(mb * bs)
+    valid = (tables[:, slots // bs] >= 0) & (
+        slots[None] < jnp.asarray(lengths, jnp.int32)[:, None]
+    )
+    from repro.models.attention import decode_attention as xla_decode
+
+    out = xla_decode(q[:, None], gather(k_pool), gather(v_pool), valid, scale=scale)
+    return out[:, 0]

@@ -8,17 +8,34 @@ importing this module does not touch jax device state.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 import jax
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Tuple[str, ...]):
+    """Version-portable ``jax.make_mesh``.
+
+    Newer JAX exposes ``jax.sharding.AxisType`` and ``make_mesh`` accepts an
+    ``axis_types`` kwarg; JAX 0.4.x has neither. Pass it when available, fall
+    back to the plain call (equivalent: Auto is the default axis semantics).
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(shape), tuple(axes),
+                axis_types=(axis_type.Auto,) * len(axes),
+            )
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:

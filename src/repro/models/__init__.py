@@ -8,7 +8,9 @@ from repro.models.model import (
     input_specs,
     loss_fn,
     make_train_step,
+    paged_cache_supported,
     prefill,
+    prefill_chunk,
 )
 
 __all__ = [
@@ -21,5 +23,7 @@ __all__ = [
     "input_specs",
     "loss_fn",
     "make_train_step",
+    "paged_cache_supported",
     "prefill",
+    "prefill_chunk",
 ]

@@ -205,6 +205,48 @@ def prefill(cfg, params, batch):
     return logits[:, -1], caches
 
 
+def prefill_chunk(cfg, params, caches, tokens, pos):
+    """Chunked prefill: run C prompt tokens (absolute positions
+    ``pos .. pos+C-1``, scalar ``pos``) against the serve cache, writing their
+    K/V entries in place. Long retrieved contexts stream through in fixed-size
+    chunks instead of being bucketed (and silently truncated) to a power of
+    two. Returns (logits (B, C, V), new caches).
+
+    Supported for full-attention GQA stacks (``paged_cache_supported``); other
+    mixers keep the whole-prompt prefill path."""
+    x = embed_tokens(params["embed"], tokens)
+    if (cfg.is_encoder_decoder or not cfg.use_rope) and not cfg.attention_free:
+        C = x.shape[1]
+        pe = jax.vmap(lambda p_: _sinusoidal_at(p_, cfg.d_model))(pos + jnp.arange(C))
+        x = x + pe[None].astype(x.dtype)
+    x, new_caches = tfm.run_stack_prefix(cfg, params["blocks"], x, caches, pos)
+    x = tfm.apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], params.get("lm_head"), x, cfg.tie_embeddings)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask pad-vocab logits (as forward)
+        pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+        logits = logits + pad_bias.astype(logits.dtype)
+    return logits, new_caches
+
+
+def paged_cache_supported(cfg: ModelConfig) -> bool:
+    """Whether the paged serving path (block-table decode + chunked prefill +
+    prefix sharing) supports this architecture: a homogeneous full-attention
+    GQA decoder with rope positions and a plain token frontend. Everything
+    else (MLA latents, recurrent/hybrid state, ring SWA caches, enc-dec,
+    meta/patch prefixes) keeps the dense engine."""
+    from repro.configs.base import ATTN_FULL
+
+    return (
+        tfm.period(cfg) == 1
+        and cfg.attn_type == ATTN_FULL
+        and cfg.use_rope
+        and not cfg.is_encoder_decoder
+        and not cfg.num_meta_tokens
+        and not cfg.num_patch_tokens
+        and not cfg.kv_cache_quant  # int8 paged pools: ROADMAP follow-on
+    )
+
+
 def decode_step(cfg, params, caches, tokens, pos):
     """One decode step. tokens: (B, 1) int32; pos: scalar int32 absolute
     position of the new token. Returns (logits (B, V), new caches)."""

@@ -325,6 +325,59 @@ def apply_layer_decode(cfg, kind, lp, x, cache, pos, enc_out_unused=None):
 
 
 # ---------------------------------------------------------------------------
+# per-layer apply: chunked prefill mode (C tokens against a cached prefix)
+# ---------------------------------------------------------------------------
+
+
+def apply_layer_prefix(cfg, kind, lp, x, cache, pos):
+    """Chunked prefill: x (B,C,D) of prompt tokens at absolute positions
+    ``pos .. pos+C-1`` attends the cached prefix plus itself (causal). The
+    chunk's K/V entries are written into the cache before attention, so the
+    returned cache is ready for the next chunk or for decode.
+
+    Full-attention GQA stacks only (the paged serving path); other mixers keep
+    the bucketed whole-prompt prefill."""
+    from repro.models.layers import apply_rope
+
+    B, C, _ = x.shape
+    at = kind["attn_type"]
+    if at != ATTN_FULL or kind["cross"]:
+        raise NotImplementedError(
+            "chunked prefix prefill supports full-attention GQA stacks only"
+        )
+    xn = apply_norm(cfg, lp["norm1"], x)
+    positions = jnp.broadcast_to(
+        (pos + jnp.arange(C)).astype(jnp.int32)[None], (B, C)
+    )
+    q, k, v = attn.qkv_project(lp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    Sc = cache["k"].shape[1]
+    if cfg.kv_cache_quant:
+        kc = _cache_update(cache["k"], _quantize_kv(k, cfg), pos)
+        vc = _cache_update(cache["v"], _quantize_kv(v, cfg), pos)
+        k_read = _dequantize_kv(kc, cfg, q.dtype)
+        v_read = _dequantize_kv(vc, cfg, q.dtype)
+    else:
+        kc = _cache_update(cache["k"], k, pos)
+        vc = _cache_update(cache["v"], v, pos)
+        k_read, v_read = kc, vc
+    valid = jnp.arange(Sc)[None, None, :] <= positions[:, :, None]  # (B,C,Sc)
+    a_out = attn.chunk_decode_attention(q, k_read, v_read, valid)
+    x = x + a_out.reshape(B, C, cfg.num_heads * cfg.head_dim) @ lp["attn"]["wo"]
+    new_cache = dict(cache)
+    new_cache.update(k=kc, v=vc)
+
+    xn = apply_norm(cfg, lp["norm2"], x)
+    if "moe" in lp:
+        ffn_out, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
+    else:
+        ffn_out = apply_mlp(lp["mlp"], xn, cfg.act)
+    return x + ffn_out, new_cache
+
+
+# ---------------------------------------------------------------------------
 # stack runner
 # ---------------------------------------------------------------------------
 
@@ -414,6 +467,25 @@ def _segment_size(G: int) -> int:
         if G % s == 0 and abs(s - math.isqrt(G)) < abs(best - math.isqrt(G)):
             best = s
     return best
+
+
+def run_stack_prefix(cfg, blocks, x, caches, pos_scalar):
+    """Scan the layer stack in chunked-prefill mode: x (B,C,D) written into
+    (and attending) the serve cache at absolute start position ``pos_scalar``
+    (scalar; the chunk must fit inside the cache, no ring wrap)."""
+    p = period(cfg)
+    kinds = [layer_kind(cfg, pos) for pos in range(p)]
+
+    def body(x, slices):
+        block_slice, cache_slice = slices
+        new_caches = []
+        for i in range(p):
+            x, nc = apply_layer_prefix(cfg, kinds[i], block_slice[i], x, cache_slice[i], pos_scalar)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+    return x, new_caches
 
 
 def run_stack_decode(cfg, blocks, x, caches, pos_scalar):

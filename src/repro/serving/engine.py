@@ -4,16 +4,30 @@ Real JAX execution at laptop scale (smoke-size models on CPU); the cluster
 simulation calibrates its Generator cost model against this engine. The
 engine implements the standard serving loop:
 
-    submit(prompt) -> slot assignment -> prefill -> batched decode steps
+    submit(prompt) -> admission -> prefill -> batched decode steps
     with per-slot positions -> emit tokens until max_new/eos.
 
-Prompt lengths are bucketed (powers of two) to bound jit retraces.
+Two cache backends:
+
+* ``paged`` (default, full-attention GQA stacks): a vLLM-style block pool
+  (`serving.paged_cache`) with admission gated on free blocks, chunked
+  prefill (long retrieved contexts stream through in fixed chunks instead of
+  being bucketed and truncated to a power of two), block-table-driven decode
+  (the jnp gather oracle of `kernels.decode_attention.paged_decode_attention`)
+  and prefix-block sharing, so concurrent RAG requests embedding the same
+  retrieved documents reuse cache blocks instead of recomputing them. On
+  pool exhaustion the youngest request is preempted and re-queued (its
+  continuation re-prefills, reusing its own published prefix blocks).
+
+* ``dense`` (fallback + parity oracle): the original contiguous per-slot
+  cache with power-of-two prompt buckets; architectures the paged path does
+  not cover (MLA, recurrent/hybrid state, ring SWA, enc-dec, int8 cache)
+  land here automatically.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -21,8 +35,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, forward, init_cache, init_params
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    paged_cache_supported,
+    prefill_chunk,
+)
+from repro.serving.paged_cache import (
+    PagedKVCache,
+    gather_paged_batch,
+    write_paged_chunk,
+)
 from repro.serving.sampler import sample_tokens
+
+_NULL_SEQ = -1  # owner of the reserved scratch block
 
 
 @dataclass
@@ -35,6 +63,8 @@ class Request:
     slot: int = -1
     pos: int = 0
     done: bool = False
+    truncated: bool = False          # prompt exceeded engine capacity
+    shared_prefix_tokens: int = 0    # prompt tokens served from shared blocks
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
@@ -56,6 +86,11 @@ class GenerationEngine:
         max_seq: int = 256,
         seed: int = 0,
         eos_token: int = -1,
+        backend: str = "paged",
+        block_size: int = 16,
+        prefill_chunk_size: int = 64,
+        n_blocks: Optional[int] = None,
+        prefix_sharing: bool = True,
     ):
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
@@ -63,19 +98,47 @@ class GenerationEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_token = eos_token
-        self.cache = init_cache(cfg, max_batch, max_seq)
+        if backend == "paged" and not paged_cache_supported(cfg):
+            backend = "dense"  # arch outside the paged contract: parity oracle path
+        self.backend = backend
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
         self._next_id = 0
         self._key = jax.random.PRNGKey(seed + 1)
-        self._decode_jit = jax.jit(self._decode_fn)
-        self._prefill_jit: Dict[int, Any] = {}
         self.steps = 0
         self.tokens_out = 0
+        self.prefill_tokens = 0
+        self.preemptions = 0
+
+        if self.backend == "paged":
+            self.block_size = block_size
+            self.max_blocks = -(-max_seq // block_size)
+            self.prefill_chunk_size = prefill_chunk_size
+            # the prefill view carries slack blocks so a padded chunk write
+            # never runs past the end of the gathered cache
+            self._view_blocks = self.max_blocks + -(-prefill_chunk_size // block_size)
+            if n_blocks is None:
+                # full provisioning: every slot can reach max_seq (+ slack), +1 scratch
+                n_blocks = max_batch * (self.max_blocks + 1) + 1
+            self.kv = PagedKVCache(
+                cfg, n_blocks, block_size, self.max_blocks, prefix_sharing=prefix_sharing
+            )
+            # reserved scratch block: swallows masked padding/inactive-slot
+            # writes and backs clamped gathers of unallocated table entries
+            self._null_block = self.kv.pool.allocate(_NULL_SEQ, 1)[0]
+            self._decode_paged_jit = jax.jit(self._decode_paged_fn)
+            self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn)
+        else:
+            self.cache = init_cache(cfg, max_batch, max_seq)
+            self._decode_jit = jax.jit(self._decode_fn)
+            self._prefill_jit: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0) -> Request:
-        req = Request(self._next_id, np.asarray(prompt, np.int32), max_new, temperature)
+        prompt = np.atleast_1d(np.asarray(prompt, np.int32))
+        if prompt.size == 0:
+            prompt = np.zeros(1, np.int32)  # empty prompt: decode from pad token
+        req = Request(self._next_id, prompt, max_new, temperature)
         req.submitted_at = time.monotonic()
         self._next_id += 1
         self.waiting.append(req)
@@ -86,15 +149,157 @@ class GenerationEngine:
             self.step()
             max_steps -= 1
 
+    def stats(self) -> Dict[str, Any]:
+        s: Dict[str, Any] = {
+            "backend": self.backend,
+            "steps": self.steps,
+            "tokens_out": self.tokens_out,
+            "prefill_tokens": self.prefill_tokens,
+            "preemptions": self.preemptions,
+        }
+        if self.backend == "paged":
+            s["utilization"] = self.kv.utilization()
+            s["prefix_hit_tokens"] = self.kv.shared_token_hits
+            s["free_blocks"] = self.kv.pool.n_free
+        return s
+
+    # ------------------------------------------------------------ admission
+    def _prompt_cap(self, req: Request) -> int:
+        # same cap as the dense path (eff = min(Lp, bucket <= max_seq)): a
+        # full-length prompt samples one token from the last-position logits
+        # and finishes before any decode write could overflow the block table
+        return min(len(req.prompt), self.max_seq)
+
+    def _try_admit(self, req: Request) -> bool:
+        if self.backend != "paged":
+            return True  # dense: a free slot is the only admission resource
+        cap = self._prompt_cap(req)
+        if self.kv.pool.blocks_needed(cap + self.block_size) > self.kv.pool.n_blocks - 1:
+            # can never fit, even with the whole pool free: fail the request
+            # instead of wedging the queue
+            req.done = True
+            req.truncated = True
+            req.finished_at = time.monotonic()
+            return False
+        n_shared = self.kv.admit_tokens(req.req_id, req.prompt[:cap])
+        if n_shared is None:
+            return False  # backpressure: stays queued until blocks free up
+        req.shared_prefix_tokens = n_shared
+        return True
+
     # ------------------------------------------------------------ internals
     def _decode_fn(self, params, cache, tokens, pos):
         return decode_step(self.cfg, params, cache, tokens, pos)
 
+    # ---------------------------------------------------------- paged path
+    def _prefill_chunk_fn(self, params, k_pool, v_pool, table_row, tokens, start, n_valid):
+        """One chunked-prefill step for a single request (B=1): gather the
+        sequence view, run the chunk through the stack, scatter its K/V back
+        into the pool (padding rerouted to the scratch block)."""
+        kview = gather_paged_batch(k_pool, table_row[None])  # (G,1,Sv,KVH,hd)
+        vview = gather_paged_batch(v_pool, table_row[None])
+        caches = ({"k": kview, "v": vview},)
+        logits, new_caches = prefill_chunk(self.cfg, params, caches, tokens, start)
+        pc = tokens.shape[1]
+        newk = jax.lax.dynamic_slice_in_dim(new_caches[0]["k"], start, pc, axis=2)[:, 0]
+        newv = jax.lax.dynamic_slice_in_dim(new_caches[0]["v"], start, pc, axis=2)[:, 0]
+        k_pool = write_paged_chunk(
+            k_pool, table_row, start, newk, self.block_size, n_valid, self._null_block
+        )
+        v_pool = write_paged_chunk(
+            v_pool, table_row, start, newv, self.block_size, n_valid, self._null_block
+        )
+        return logits[0, n_valid - 1], k_pool, v_pool
+
+    def _decode_paged_fn(self, params, k_pool, v_pool, tables, tokens, pos):
+        """Batched block-table decode: gather each slot's contiguous view
+        (the jnp gather oracle of kernels.decode_attention), run the shared
+        decode step, scatter the new K/V entries back into the pool."""
+        caches = (
+            {"k": gather_paged_batch(k_pool, tables), "v": gather_paged_batch(v_pool, tables)},
+        )
+        logits, new_caches = decode_step(self.cfg, params, caches, tokens, pos)
+        b = jnp.arange(tables.shape[0])
+        newk = new_caches[0]["k"][:, b, pos]  # (G,B,KVH,hd)
+        newv = new_caches[0]["v"][:, b, pos]
+        bs = self.block_size
+        dest = jnp.maximum(tables[b, pos // bs], 0) * bs + pos % bs
+
+        def scatter(pool, new):
+            G, nb = pool.shape[0], pool.shape[1]
+            flat = pool.reshape(G, nb * bs, *pool.shape[3:])
+            return flat.at[:, dest].set(new.astype(flat.dtype)).reshape(pool.shape)
+
+        return logits, scatter(k_pool, newk), scatter(v_pool, newv)
+
+    def _prefill_paged(self, req: Request, slot: int):
+        cap = self._prompt_cap(req)
+        req.truncated = cap < len(req.prompt)
+        toks = np.asarray(req.prompt[:cap], np.int32)
+        pc = self.prefill_chunk_size
+        table = jnp.asarray(
+            self.kv.pool.table_array([req.req_id], self._view_blocks)[0]
+        )
+        pos = req.shared_prefix_tokens  # shared blocks carry the prefix K/V
+        last = None
+        while pos < cap:
+            C = min(pc, cap - pos)
+            chunk = np.zeros((1, pc), np.int32)
+            chunk[0, :C] = toks[pos : pos + C]
+            last, self.kv.k, self.kv.v = self._prefill_chunk_jit(
+                self.params, self.kv.k, self.kv.v, table, jnp.asarray(chunk), pos, C
+            )
+            pos += C
+            self.prefill_tokens += C
+        self.kv.lengths[req.req_id] = cap
+        self.kv.register_prefix(req.req_id, toks)
+        req.slot = slot
+        req.pos = cap
+        self._key, sk = jax.random.split(self._key)
+        tok = int(sample_tokens(sk, jnp.asarray(last)[None], req.temperature)[0])
+        self._emit(req, tok)
+
+    def _preempt(self, victim: Request):
+        """Release a request's blocks and re-queue its continuation (prompt +
+        generated tokens); re-admission re-prefills, reusing any of its own
+        prefix blocks that survived in the warm cache."""
+        self.kv.release(victim.req_id)
+        if victim.slot >= 0 and self.slots[victim.slot] is victim:
+            self.slots[victim.slot] = None
+        victim.slot = -1
+        victim.prompt = np.concatenate(
+            [np.asarray(victim.prompt, np.int32),
+             np.asarray(victim.out_tokens, np.int32)]
+        )
+        victim.shared_prefix_tokens = 0
+        self.waiting.insert(0, victim)
+        self.preemptions += 1
+
+    def _ensure_decode_capacity(self):
+        """Every active slot needs a block backing its next write position;
+        preempt youngest-first when the pool runs dry."""
+        for r in [r for r in self.slots if r is not None]:
+            if r.slot < 0 or self.slots[r.slot] is not r:
+                continue  # already preempted this round
+            while True:
+                try:
+                    self.kv.pool.extend_for(r.req_id, r.pos + 1)
+                    break
+                except MemoryError:
+                    active = [x for x in self.slots if x is not None]
+                    victim = max(active, key=lambda x: x.req_id)
+                    self._preempt(victim)
+                    if victim is r:
+                        break
+
+    # ---------------------------------------------------------- dense path
     def _prefill_one(self, req: Request, slot: int):
         Lp = len(req.prompt)
         bucket = min(_bucket(Lp), self.max_seq)
+        eff = min(Lp, bucket)  # tokens that actually entered the cache
+        req.truncated = eff < Lp
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :Lp] = req.prompt[:bucket]
+        toks[0, :eff] = req.prompt[:eff]
         if bucket not in self._prefill_jit:
 
             def pf(params, tokens):
@@ -105,38 +310,68 @@ class GenerationEngine:
         logits, pcache = self._prefill_jit[bucket](self.params, jnp.asarray(toks))
         # write this request's cache into the batch cache at `slot`
         self.cache = _merge_cache(self.cache, pcache, slot, self.max_seq)
+        self.prefill_tokens += eff
         req.slot = slot
-        req.pos = Lp
-        last = np.asarray(logits)[0, Lp - 1]
+        req.pos = eff  # NOT Lp: a truncated prompt must not overrun its cache
+        last = np.asarray(logits)[0, eff - 1]
         self._key, sk = jax.random.split(self._key)
         tok = int(sample_tokens(sk, jnp.asarray(last[None]), req.temperature)[0])
         self._emit(req, tok)
 
+    # ------------------------------------------------------------- stepping
     def step(self) -> Dict[int, List[int]]:
         """One engine iteration: admit waiting requests, one batched decode."""
+        blocked = False
         for slot in range(self.max_batch):
-            if self.slots[slot] is None and self.waiting:
-                req = self.waiting.pop(0)
+            while self.slots[slot] is None and self.waiting and not blocked:
+                req = self.waiting[0]
+                if not self._try_admit(req):
+                    if req.done:  # unfittable request failed out; try the next
+                        self.waiting.pop(0)
+                        continue
+                    blocked = True  # FIFO admission: head-of-line waits for blocks
+                    break
+                self.waiting.pop(0)
                 self.slots[slot] = req
-                self._prefill_one(req, slot)
+                if self.backend == "paged":
+                    self._prefill_paged(req, slot)
+                else:
+                    self._prefill_one(req, slot)
 
+        if self.backend == "paged":
+            self._ensure_decode_capacity()
         active = [r for r in self.slots if r is not None]
         if not active:
             return {}
 
         tokens = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
+        temps = np.zeros((self.max_batch,), np.float32)
         for r in active:
             tokens[r.slot, 0] = r.out_tokens[-1] if r.out_tokens else 0
             pos[r.slot] = r.pos
-        logits, self.cache = self._decode_jit(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos)
-        )
+            temps[r.slot] = r.temperature
+
+        if self.backend == "paged":
+            tables = np.full((self.max_batch, self.max_blocks), self._null_block, np.int32)
+            rows = self.kv.batch_tables([r.req_id for r in active])
+            for i, r in enumerate(active):
+                valid = rows[i] >= 0
+                tables[r.slot, valid] = rows[i][valid]
+            logits, self.kv.k, self.kv.v = self._decode_paged_jit(
+                self.params, self.kv.k, self.kv.v,
+                jnp.asarray(tables), jnp.asarray(tokens), jnp.asarray(pos),
+            )
+            for r in active:
+                self.kv.lengths[r.req_id] = r.pos + 1
+        else:
+            logits, self.cache = self._decode_jit(
+                self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos)
+            )
         self.steps += 1
         self._key, sk = jax.random.split(self._key)
         emitted: Dict[int, List[int]] = {}
-        toks = sample_tokens(sk, logits, active[0].temperature)
-        toks = np.asarray(toks)
+        toks = np.asarray(sample_tokens(sk, logits, jnp.asarray(temps)))
         for r in list(active):
             tok = int(toks[r.slot])
             r.pos += 1
@@ -160,6 +395,8 @@ class GenerationEngine:
             req.finished_at = time.monotonic()
             if req.slot >= 0 and self.slots[req.slot] is req:
                 self.slots[req.slot] = None
+            if self.backend == "paged":
+                self.kv.release(req.req_id)
 
 
 def _merge_cache(batch_cache, one_cache, slot: int, max_seq: int):

@@ -8,14 +8,20 @@ gathers a sequence's blocks on the fly. On TPU the gather is a cheap
 VMEM), so the adaptation is table-driven gathers rather than CUDA
 page-table pointer chasing.
 
+Blocks are reference counted so concurrent RAG requests that embed the same
+retrieved documents share prefix blocks instead of recomputing them: a
+block-aligned rolling hash of the prompt indexes fully-written immutable
+blocks, and admission walks the chain reusing every matching block.
+
 Pool layout per layer-kind group (matching models.model.init_cache):
     k/v: (G, n_blocks, block_size, KVH, hd)
 Block tables: (max_seqs, max_blocks_per_seq) int32, -1 = unallocated.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,12 +30,22 @@ import numpy as np
 
 @dataclass
 class PagedPool:
-    """Host-side allocator for one cache pool."""
+    """Host-side allocator for one cache pool (reference-counted blocks).
+
+    Blocks have three states: *allocated* (refcount >= 1, owned by one or more
+    sequences), *cached* (refcount 0 but kept warm because a prefix index
+    still points at them — reclaimed lazily, oldest first, when allocation
+    needs room), and *free*. ``n_free`` counts free + cached since both are
+    allocatable."""
 
     n_blocks: int
     block_size: int
     free_list: List[int] = field(default_factory=list)
     tables: Dict[int, List[int]] = field(default_factory=dict)  # seq -> blocks
+    refcounts: Dict[int, int] = field(default_factory=dict)     # block -> refs
+    cached: List[int] = field(default_factory=list)             # warm, evictable
+    on_free: Optional[Callable[[int], None]] = None             # block truly freed
+    keep_on_release: Optional[Callable[[int], bool]] = None     # warm-cache policy
 
     def __post_init__(self):
         if not self.free_list:
@@ -37,7 +53,7 @@ class PagedPool:
 
     @property
     def n_free(self) -> int:
-        return len(self.free_list)
+        return len(self.free_list) + len(self.cached)
 
     def blocks_needed(self, n_tokens: int) -> int:
         return (n_tokens + self.block_size - 1) // self.block_size
@@ -45,15 +61,36 @@ class PagedPool:
     def can_allocate(self, n_tokens: int) -> bool:
         return self.blocks_needed(n_tokens) <= self.n_free
 
+    def _pop_block(self) -> int:
+        if self.free_list:
+            return self.free_list.pop()
+        b = self.cached.pop(0)  # evict oldest warm block
+        if self.on_free is not None:
+            self.on_free(b)
+        return b
+
     def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
         need = self.blocks_needed(n_tokens)
         if need > self.n_free:
             raise MemoryError(
                 f"paged pool exhausted: need {need} blocks, {self.n_free} free"
             )
-        blocks = [self.free_list.pop() for _ in range(need)]
+        blocks = [self._pop_block() for _ in range(need)]
+        for b in blocks:
+            self.refcounts[b] = 1
         self.tables.setdefault(seq_id, []).extend(blocks)
         return blocks
+
+    def share(self, seq_id: int, block_id: int) -> int:
+        """Append an already-written block to ``seq_id``'s table, bumping its
+        refcount (copy-on-nothing prefix sharing: only fully written, immutable
+        prompt blocks are ever shared). Reviving a warm cached block removes it
+        from the eviction list."""
+        if self.refcounts.get(block_id, 0) == 0 and block_id in self.cached:
+            self.cached.remove(block_id)
+        self.refcounts[block_id] = self.refcounts.get(block_id, 0) + 1
+        self.tables.setdefault(seq_id, []).append(block_id)
+        return block_id
 
     def extend_for(self, seq_id: int, new_len: int) -> Optional[int]:
         """Ensure capacity for new_len tokens; returns a newly allocated
@@ -64,7 +101,16 @@ class PagedPool:
         return self.allocate(seq_id, new_len - have)[0]
 
     def free(self, seq_id: int):
-        self.free_list.extend(self.tables.pop(seq_id, []))
+        for b in self.tables.pop(seq_id, []):
+            self.refcounts[b] = self.refcounts.get(b, 1) - 1
+            if self.refcounts[b] <= 0:
+                del self.refcounts[b]
+                if self.keep_on_release is not None and self.keep_on_release(b):
+                    self.cached.append(b)  # stays warm for prefix reuse
+                else:
+                    self.free_list.append(b)
+                    if self.on_free is not None:
+                        self.on_free(b)
 
     def table_array(self, seq_ids: List[int], max_blocks: int) -> np.ndarray:
         out = np.full((len(seq_ids), max_blocks), -1, dtype=np.int32)
@@ -92,6 +138,27 @@ def write_paged(pool_kv, block_table_row, pos, new_kv, block_size: int):
     return pool_kv.at[:, blk_idx, off].set(new_kv.astype(pool_kv.dtype))
 
 
+def write_paged_chunk(pool_kv, block_table_row, start, new_kv, block_size: int,
+                      n_valid=None, null_dest: int = 0):
+    """Vectorized bulk write of a C-token chunk at absolute positions
+    ``start .. start+C-1`` (one scatter instead of C sequential updates).
+
+    pool_kv: (G, n_blocks, bs, KVH, hd); new_kv: (G, C, KVH, hd).
+    ``n_valid`` (traced scalar) masks trailing padding tokens: their writes
+    are routed to slot 0 of the ``null_dest`` block (the engine reserves a
+    scratch block that no sequence ever reads)."""
+    G, nb, bs = pool_kv.shape[0], pool_kv.shape[1], pool_kv.shape[2]
+    C = new_kv.shape[1]
+    pos = start + jnp.arange(C)
+    blk = jnp.maximum(block_table_row[pos // bs], 0)
+    dest = blk * bs + pos % bs
+    if n_valid is not None:
+        dest = jnp.where(jnp.arange(C) < n_valid, dest, null_dest * bs)
+    flat = pool_kv.reshape(G, nb * bs, *pool_kv.shape[3:])
+    flat = flat.at[:, dest].set(new_kv.astype(pool_kv.dtype))
+    return flat.reshape(pool_kv.shape)
+
+
 def gather_paged(pool_kv, block_table_row, max_blocks: int):
     """Materialize a sequence's contiguous cache view from its pages:
     (G, max_blocks*block_size, KVH, hd). Unallocated pages read block 0 and
@@ -102,6 +169,15 @@ def gather_paged(pool_kv, block_table_row, max_blocks: int):
     return gathered.reshape(G, nb * bs, KVH, hd)
 
 
+def gather_paged_batch(pool_kv, block_tables):
+    """Batched gather: block_tables (B, max_blocks) -> (G, B, mb*bs, KVH, hd),
+    the contiguous per-slot view the batched decode step consumes."""
+    safe = jnp.maximum(block_tables, 0)
+    g = jnp.take(pool_kv, safe, axis=1)  # (G, B, mb, bs, KVH, hd)
+    G, B, mb, bs = g.shape[:4]
+    return g.reshape(G, B, mb * bs, *g.shape[4:])
+
+
 def paged_validity(block_table_row, length, block_size: int, max_blocks: int):
     """(max_blocks*block_size,) bool: slot is backed by a real page AND below
     the sequence length."""
@@ -110,19 +186,44 @@ def paged_validity(block_table_row, length, block_size: int, max_blocks: int):
     return backed & (slots < length)
 
 
+# ---------------------------------------------------------------------------
+# prefix hashing (host side)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_hash(prev: bytes, tokens_block: np.ndarray) -> bytes:
+    """Rolling block hash: H_i = sha1(H_{i-1} || tokens of block i). Chained
+    so a block matches only when the entire prefix up to it matches."""
+    h = hashlib.sha1(prev)
+    h.update(np.ascontiguousarray(tokens_block, dtype=np.int64).tobytes())
+    return h.digest()
+
+
+def prefix_block_keys(tokens, block_size: int) -> List[bytes]:
+    """Chained hash keys for every FULL block of ``tokens``."""
+    toks = np.asarray(tokens)
+    keys: List[bytes] = []
+    prev = b""
+    for i in range(len(toks) // block_size):
+        prev = _chunk_hash(prev, toks[i * block_size : (i + 1) * block_size])
+        keys.append(prev)
+    return keys
+
+
 class PagedKVCache:
     """End-to-end paged cache for one model: pools per layer-group position.
 
     Usage (mirrors the engine's flow):
         cache = PagedKVCache(cfg, n_blocks=256, block_size=16)
-        cache.admit(seq_id, prompt_len)              # host: allocate pages
-        cache.write_prefill(seq_id, k_entries)       # device: copy-in
+        n_shared = cache.admit_tokens(seq_id, prompt_tokens)  # host: allocate
+        cache.write_prefill(seq_id, k_entries)                # device: copy-in
+        cache.register_prefix(seq_id, prompt_tokens)          # publish blocks
         kv, valid = cache.sequence_view(seq_id, length)
         cache.release(seq_id)
     """
 
     def __init__(self, cfg, n_blocks: int = 256, block_size: int = 16,
-                 max_blocks_per_seq: int = 64):
+                 max_blocks_per_seq: int = 64, prefix_sharing: bool = True):
         from repro.models import transformer as tfm
 
         self.cfg = cfg
@@ -131,13 +232,81 @@ class PagedKVCache:
         p = tfm.period(cfg)
         G = cfg.num_layers // p
         dtype = jnp.dtype(cfg.dtype)
-        self.pool = PagedPool(n_blocks, block_size)
+        self.pool = PagedPool(
+            n_blocks, block_size,
+            on_free=self._forget_block,
+            keep_on_release=lambda b: b in self._block_key,
+        )
         self.k = jnp.zeros((G, n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim), dtype)
         self.v = jnp.zeros_like(self.k)
         self.lengths: Dict[int, int] = {}
+        self.prefix_sharing = prefix_sharing
+        self._prefix_index: Dict[bytes, int] = {}   # chain hash -> block id
+        self._block_key: Dict[int, bytes] = {}      # reverse map for eviction
+        self.shared_token_hits = 0                  # prompt tokens served from shared blocks
 
     # ----------------------------------------------------------- host side
+    def _forget_block(self, block_id: int):
+        key = self._block_key.pop(block_id, None)
+        if key is not None and self._prefix_index.get(key) == block_id:
+            del self._prefix_index[key]
+
+    def _shareable_blocks(self, tokens) -> List[int]:
+        """Longest chain of already-cached full prompt blocks. Never includes
+        the block holding the final prompt token — at least one token must run
+        through the model to produce the first-sample logits."""
+        if not self.prefix_sharing:
+            return []
+        bs = self.block_size
+        limit = (len(tokens) - 1) // bs  # last-token block excluded
+        blocks: List[int] = []
+        for key in prefix_block_keys(np.asarray(tokens)[: limit * bs], bs):
+            b = self._prefix_index.get(key)
+            if b is None:
+                break
+            blocks.append(b)
+        return blocks
+
+    def admit_tokens(self, seq_id: int, tokens) -> Optional[int]:
+        """Admission-controlled allocation for a prompt. Reuses every cached
+        prefix block, allocates the tail (+1 slack block for decode), and
+        returns the number of prompt tokens already served by shared blocks —
+        or None when the pool cannot fit the request (backpressure)."""
+        Lp = len(tokens)
+        shared = self._shareable_blocks(tokens)
+        n_shared = len(shared) * self.block_size
+        need_tokens = Lp - n_shared + self.block_size
+        # reviving a warm cached block consumes n_free headroom too — count it,
+        # or the tail allocation below can raise instead of backpressuring
+        n_warm = sum(1 for b in shared if self.pool.refcounts.get(b, 0) == 0)
+        if self.pool.blocks_needed(need_tokens) + n_warm > self.pool.n_free:
+            return None
+        for b in shared:
+            self.pool.share(seq_id, b)
+        self.pool.allocate(seq_id, need_tokens)
+        self.lengths[seq_id] = n_shared
+        self.shared_token_hits += n_shared
+        return n_shared
+
+    def register_prefix(self, seq_id: int, tokens):
+        """Publish this sequence's fully written prompt blocks into the prefix
+        index so later requests with the same retrieved-context prefix reuse
+        them. Only immutable blocks qualify: block i is registered iff the
+        prompt covers it entirely ((i+1)*bs <= len(tokens)); decode writes land
+        strictly after the prompt, so published blocks are never mutated."""
+        if not self.prefix_sharing:
+            return
+        table = self.pool.tables.get(seq_id, [])
+        for i, key in enumerate(prefix_block_keys(tokens, self.block_size)):
+            if i >= len(table):
+                break
+            if key not in self._prefix_index:
+                self._prefix_index[key] = table[i]
+                self._block_key[table[i]] = key
+
     def admit(self, seq_id: int, prompt_len: int) -> bool:
+        """Length-only admission (no prefix sharing); kept for callers that
+        stream K/V in without token identity."""
         if not self.pool.can_allocate(prompt_len + self.block_size):
             return False  # backpressure: engine keeps the request queued
         self.pool.allocate(seq_id, prompt_len + self.block_size)
@@ -147,6 +316,9 @@ class PagedKVCache:
     def release(self, seq_id: int):
         self.pool.free(seq_id)
         self.lengths.pop(seq_id, None)
+
+    def batch_tables(self, seq_ids: List[int]) -> np.ndarray:
+        return self.pool.table_array(seq_ids, self.max_blocks)
 
     # --------------------------------------------------------- device side
     def write_token(self, seq_id: int, k_entry, v_entry):
@@ -159,12 +331,12 @@ class PagedKVCache:
         self.lengths[seq_id] = pos + 1
 
     def write_prefill(self, seq_id: int, k_seq, v_seq):
-        """k/v_seq: (G, Lp, KVH, hd) — bulk copy of a prefilled prompt."""
+        """k/v_seq: (G, Lp, KVH, hd) — bulk vectorized copy of a prefilled
+        prompt (single scatter; no host loop)."""
         Lp = k_seq.shape[1]
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
-        for t in range(Lp):  # host loop: prefill copy-in happens once/request
-            self.k = write_paged(self.k, row, t, k_seq[:, t], self.block_size)
-            self.v = write_paged(self.v, row, t, v_seq[:, t], self.block_size)
+        self.k = write_paged_chunk(self.k, row, 0, k_seq, self.block_size)
+        self.v = write_paged_chunk(self.v, row, 0, v_seq, self.block_size)
         self.lengths[seq_id] = Lp
 
     def sequence_view(self, seq_id: int) -> Tuple:

@@ -1,0 +1,274 @@
+"""Paged serving engine: dense-parity, block lifecycle, prefix sharing,
+chunked prefill, sampling regressions, and the paged decode kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.core.components import Generator
+from repro.core.profiling import calibrate_generator_from_engine
+from repro.serving.engine import GenerationEngine
+from repro.serving.paged_cache import PagedKVCache
+
+
+def _cfg():
+    return smoke_variant(get_arch("smollm-135m"))
+
+
+# ------------------------------------------------------------------ parity
+
+
+def test_paged_is_default_backend():
+    eng = GenerationEngine(_cfg(), max_batch=2, max_seq=64)
+    assert eng.backend == "paged"
+
+
+def test_unsupported_arch_falls_back_to_dense():
+    eng = GenerationEngine(smoke_variant(get_arch("minicpm3-4b")), max_batch=1, max_seq=64)
+    assert eng.backend == "dense"  # MLA latents keep the dense cache
+    r = eng.submit(np.arange(6) % 50, max_new=4)
+    eng.run_until_done()
+    assert r.done and len(r.out_tokens) >= 4
+
+
+def test_paged_matches_dense_token_for_token():
+    """The paged backend must reproduce the dense engine exactly under greedy
+    decode — batched, with mixed prompt lengths."""
+    cfg = _cfg()
+    prompts = [np.arange(9) % 50, np.arange(21) % 50 + 3, np.arange(5) % 50 + 7]
+    outs = {}
+    for backend in ("dense", "paged"):
+        eng = GenerationEngine(cfg, max_batch=3, max_seq=128, backend=backend)
+        reqs = [eng.submit(p, max_new=8) for p in prompts]
+        eng.run_until_done()
+        outs[backend] = [r.out_tokens for r in reqs]
+    assert outs["paged"] == outs["dense"]
+
+
+def test_paged_batching_matches_solo():
+    cfg = _cfg()
+    prompt = np.arange(9) % 50
+    solo = GenerationEngine(cfg, max_batch=1, max_seq=128)
+    r_solo = solo.submit(prompt, max_new=6)
+    solo.run_until_done()
+    batched = GenerationEngine(cfg, max_batch=3, max_seq=128)
+    batched.submit(np.arange(5) % 50 + 7, max_new=6)
+    r_b = batched.submit(prompt, max_new=6)
+    batched.submit(np.arange(7) % 50 + 3, max_new=6)
+    batched.run_until_done()
+    assert r_solo.out_tokens == r_b.out_tokens
+
+
+# ------------------------------------------------------- block lifecycle
+
+
+def test_no_block_leaks_after_churn():
+    """Repeated admit/decode/release cycles must return every block (only the
+    reserved scratch block stays allocated); warm cached prefix blocks count
+    as reclaimable."""
+    eng = GenerationEngine(_cfg(), max_batch=2, max_seq=64)
+    for wave in range(3):
+        reqs = [eng.submit(np.arange(4 + 3 * i + wave) % 90, max_new=5) for i in range(4)]
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+    assert eng.kv.pool.n_free == eng.kv.pool.n_blocks - 1  # -1: scratch block
+    assert not eng.kv.pool.tables.get(1), "released tables must be dropped"
+
+
+def test_admission_backpressure_small_pool():
+    """A pool smaller than the offered load must backpressure (queue) rather
+    than crash, and still complete every request."""
+    eng = GenerationEngine(_cfg(), max_batch=4, max_seq=64, n_blocks=9)
+    reqs = [eng.submit(np.arange(20 + i) % 90, max_new=4) for i in range(6)]
+    eng.run_until_done()
+    assert all(r.done and len(r.out_tokens) >= 4 for r in reqs)
+
+
+def test_admission_backpressure_counts_warm_shared_blocks():
+    """Regression: admission used to check free capacity before reviving warm
+    cached prefix blocks, so a prefix-heavy request could raise MemoryError
+    mid-admission instead of queueing. It must backpressure, then admit once
+    the active request releases its blocks."""
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=128, n_blocks=9)
+    ctx = np.arange(64) % 90
+    r1 = eng.submit(ctx, max_new=2)
+    eng.run_until_done()
+    assert r1.done  # its 4 prompt blocks stay warm in the prefix cache
+    r3 = eng.submit(np.arange(32) % 90 + 5, max_new=20)  # holds blocks a while
+    r2 = eng.submit(np.concatenate([ctx, [1, 2, 3]]), max_new=2)
+    eng.run_until_done()  # must never raise MemoryError
+    assert r3.done and r2.done
+    assert r2.shared_prefix_tokens == 64
+
+
+def test_preemption_recovers_and_matches_unconstrained():
+    """Pool exhaustion mid-decode preempts the youngest request; its re-queued
+    continuation must still produce exactly the unconstrained greedy tokens."""
+    cfg = _cfg()
+    prompts = [np.arange(30) % 90, np.arange(30) % 90 + 1]
+    big = GenerationEngine(cfg, max_batch=2, max_seq=64)
+    want = []
+    for p in prompts:
+        r = big.submit(p, max_new=24)
+        big.run_until_done()
+        want.append(r.out_tokens)
+
+    small = GenerationEngine(cfg, max_batch=2, max_seq=64, n_blocks=8,
+                             prefix_sharing=False)
+    got = [small.submit(p, max_new=24) for p in prompts]
+    small.run_until_done(max_steps=500)
+    assert all(r.done for r in got)
+    assert small.preemptions >= 1
+    assert [r.out_tokens for r in got] == want
+
+
+# ------------------------------------------------------- prefix sharing
+
+
+def test_prefix_sharing_refcounts_and_hits():
+    """Concurrent requests with the same retrieved-context prefix must share
+    blocks (refcount 2), and release must decref without freeing in-use
+    blocks."""
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=128)
+    ctx = np.arange(48) % 90  # 3 full blocks at block_size=16
+    a = eng.submit(np.concatenate([ctx, [1, 2, 3]]), max_new=64)  # stays active
+    b = eng.submit(np.concatenate([ctx, [9, 8, 7]]), max_new=4)
+    eng.step()  # admit + prefill both, one decode
+    assert eng.kv.shared_token_hits == 48
+    table_a = eng.kv.pool.tables[a.req_id]
+    table_b = eng.kv.pool.tables[b.req_id]
+    assert table_a[:3] == table_b[:3], "context blocks shared, not copied"
+    assert all(eng.kv.pool.refcounts[blk] == 2 for blk in table_a[:3])
+    eng.run_until_done()
+    assert eng.kv.pool.n_free == eng.kv.pool.n_blocks - 1
+
+
+def test_prefix_sharing_across_sequential_requests():
+    """Released prefix blocks stay warm: a later request with the same
+    retrieved context reuses them instead of recomputing prefill."""
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=1, max_seq=128)
+    ctx = np.arange(64) % 90
+    r1 = eng.submit(np.concatenate([ctx, [5]]), max_new=3)
+    eng.run_until_done()
+    prefill_before = eng.prefill_tokens
+    r2 = eng.submit(np.concatenate([ctx, [6]]), max_new=3)
+    eng.run_until_done()
+    assert eng.kv.shared_token_hits == 64
+    assert eng.prefill_tokens - prefill_before == 1  # only the unique tail ran
+    # and shared-prefix decode matches a cold engine exactly
+    cold = GenerationEngine(cfg, max_batch=1, max_seq=128, prefix_sharing=False)
+    rc = cold.submit(np.concatenate([ctx, [6]]), max_new=3)
+    cold.run_until_done()
+    assert r2.out_tokens == rc.out_tokens
+
+
+# ----------------------------------------------------- sampling / prefill
+
+
+def test_mixed_temperature_batch_keeps_greedy_rows_greedy():
+    """Regression: slot 0's temperature used to be applied to every slot.
+    A greedy request batched after a hot-temperature request must decode the
+    same tokens it decodes solo."""
+    cfg = _cfg()
+    prompt = np.arange(11) % 50
+    solo = GenerationEngine(cfg, max_batch=1, max_seq=128)
+    r_solo = solo.submit(prompt, max_new=8, temperature=0.0)
+    solo.run_until_done()
+
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=128)
+    eng.submit(np.arange(7) % 50, max_new=8, temperature=5.0)  # slot 0: hot
+    r_greedy = eng.submit(prompt, max_new=8, temperature=0.0)
+    eng.run_until_done()
+    assert r_greedy.out_tokens == r_solo.out_tokens
+
+
+def test_truncated_prompt_does_not_overrun_position():
+    """Regression: req.pos was set to the full prompt length even when the
+    prompt was truncated to engine capacity."""
+    cfg = _cfg()
+    long_prompt = np.arange(100) % 90
+    for backend in ("paged", "dense"):
+        eng = GenerationEngine(cfg, max_batch=1, max_seq=64, backend=backend)
+        r = eng.submit(long_prompt, max_new=4)
+        eng.run_until_done()
+        assert r.done and r.truncated
+        assert r.pos <= eng.max_seq, backend
+
+
+def test_chunked_prefill_any_length_matches_bucketed():
+    """Chunked prefill must agree with the dense bucketed path for lengths
+    that straddle chunk and block boundaries."""
+    cfg = _cfg()
+    for Lp in (1, 15, 16, 17, 63, 64, 65):
+        prompt = (np.arange(Lp) * 7) % 90
+        pe = GenerationEngine(cfg, max_batch=1, max_seq=128, backend="paged",
+                              prefill_chunk_size=32)
+        rp = pe.submit(prompt, max_new=4)
+        pe.run_until_done()
+        de = GenerationEngine(cfg, max_batch=1, max_seq=128, backend="dense")
+        rd = de.submit(prompt, max_new=4)
+        de.run_until_done()
+        assert rp.out_tokens == rd.out_tokens, f"Lp={Lp}"
+
+
+# ------------------------------------------------------------ kernel
+
+
+def test_paged_decode_kernel_matches_oracle_and_contiguous():
+    from repro.kernels.decode_attention import (
+        decode_attention,
+        paged_decode_attention,
+        ref_paged_decode_attention,
+    )
+
+    rng = np.random.default_rng(0)
+    B, KVH, G, hd, nb, bs, mb = 3, 2, 4, 64, 16, 8, 4
+    q = jnp.asarray(rng.standard_normal((B, KVH * G, hd)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((nb, bs, KVH, hd)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((nb, bs, KVH, hd)), jnp.float32)
+    tables = np.full((B, mb), -1, np.int32)
+    tables[0, :2] = [5, 3]
+    tables[1, :4] = [7, 1, 9, 2]
+    tables[2, :1] = [11]
+    lengths = np.asarray([13, 32, 4], np.int32)
+
+    ref = ref_paged_decode_attention(q, k_pool, v_pool, tables, lengths)
+    out = paged_decode_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+    safe = np.maximum(tables, 0)
+    kg = np.asarray(k_pool)[safe].reshape(B, mb * bs, KVH, hd)
+    vg = np.asarray(v_pool)[safe].reshape(B, mb * bs, KVH, hd)
+    out_c = decode_attention(q, jnp.asarray(kg), jnp.asarray(vg), lengths)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------- cost-model refit
+
+
+def test_generator_calibrates_against_paged_engine():
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=1, max_seq=128)
+    gen = Generator(engine=eng)
+    coeffs = calibrate_generator_from_engine(gen, eng)
+    assert coeffs["prefill_per_token_s"] > 0
+    assert coeffs["decode_per_token_s"] > 0
+    assert coeffs["decode_cache_per_ctx_token_s"] >= 0
+    assert 0.0 <= coeffs["prefix_hit_rate"] <= 1.0
+    assert gen.prefill_per_token_s == coeffs["prefill_per_token_s"]
+    # context-dependent decode cost: longer outputs strictly dominate
+    short = gen.estimate_time({"tokens_in": 100, "docs_tokens": 1000, "tokens_out": 16})
+    long = gen.estimate_time({"tokens_in": 100, "docs_tokens": 1000, "tokens_out": 64})
+    assert long > short
+
+
+def test_generator_prefix_hit_rate_discounts_prefill():
+    g = Generator()
+    base = g.estimate_time({"tokens_in": 100, "docs_tokens": 10000, "tokens_out": 32})
+    g.calibrate({"prefix_hit_rate": 0.9})
+    hot = g.estimate_time({"tokens_in": 100, "docs_tokens": 10000, "tokens_out": 32})
+    assert hot < base
