@@ -48,6 +48,7 @@ def run_backend(backend: str, cfg, params, workload, max_batch: int, max_seq: in
     assert all(r.done for r in reqs)
     out_tokens = sum(len(r.out_tokens) for r in reqs)
     stats = eng.stats()
+    lat = eng.latency_summary()
     return {
         "backend": eng.backend,
         "wall_s": wall,
@@ -57,6 +58,10 @@ def run_backend(backend: str, cfg, params, workload, max_batch: int, max_seq: in
         "prefill_tokens": stats["prefill_tokens"],
         "prefix_hit_tokens": stats.get("prefix_hit_tokens", 0),
         "preemptions": stats.get("preemptions", 0),
+        "ttft_p50": lat.get("ttft_p50", float("nan")),
+        "ttft_p95": lat.get("ttft_p95", float("nan")),
+        "tpot_p50": lat.get("tpot_p50", float("nan")),
+        "tpot_p95": lat.get("tpot_p95", float("nan")),
     }
 
 
@@ -78,6 +83,13 @@ def main():
               f"{r['tok_per_s']:>8.1f} {r['decode_steps']:>6d} "
               f"{r['prefill_tokens']:>12d} {r['prefix_hit_tokens']:>12d} "
               f"{r['preemptions']:>8d}")
+    print("\nlatency (ms):")
+    print(f"{'backend':>8} {'ttft_p50':>10} {'ttft_p95':>10} "
+          f"{'tpot_p50':>10} {'tpot_p95':>10}")
+    for r in rows:
+        print(f"{r['backend']:>8} " + " ".join(
+            f"{r[k] * 1e3:>10.2f}" for k in
+            ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95")))
     dense, paged = rows
     print(f"\npaged/dense throughput: {paged['tok_per_s'] / dense['tok_per_s']:.2f}x")
     saved = dense["prefill_tokens"] - paged["prefill_tokens"]

@@ -115,6 +115,11 @@ class Generator(Component):
     decode_per_token_s = 0.00045           # flat weights-read term / new token
     decode_cache_per_ctx_token_s = 2.25e-8  # KV-read term / context token / step
     prefix_hit_rate = 0.0                   # shared-prefix fraction of the prompt
+    # chunked-prefill TTFT term: with Sarathi-style interleaving the prompt
+    # streams through budget-bounded chunks that share each step with decode,
+    # so time-to-first-token has its own (steeper) per-token slope than the
+    # saturated whole-prompt prefill throughput above
+    ttft_per_prefill_token_s = 0.000013
 
     def __init__(self, engine=None, max_new: int = 64):
         super().__init__()
@@ -158,6 +163,16 @@ class Generator(Component):
             self.decode_per_token_s + avg_ctx * self.decode_cache_per_ctx_token_s
         )
         return self.base_time_s + prefill + decode
+
+    def estimate_ttft(self, features):
+        """Time-to-first-token under chunked interleaved prefill: the
+        non-shared prompt tokens stream through token-budget chunks, so TTFT
+        scales with computed prompt tokens at the interleaved (per-step) rate
+        rather than the saturated prefill throughput."""
+        tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
+        return self.base_time_s + tin * (1.0 - self.prefix_hit_rate) * (
+            self.ttft_per_prefill_token_s
+        )
 
     def output_features(self, features):
         f = dict(features)

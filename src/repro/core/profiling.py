@@ -67,11 +67,13 @@ def calibrate_generator_from_engine(
 
     Measures: prefill s/token from a long-prompt/1-token request, the flat
     decode s/token from a short-context decode run, the KV-read term from
-    the long-vs-short context decode delta, and the prefix hit rate from the
-    engine's shared-block counters. Returns the measured coefficients (also
-    written onto ``gen``)."""
+    the long-vs-short context decode delta, the chunked-prefill TTFT slope
+    from the long-prompt request's recorded first-token timestamp, and the
+    prefix hit rate from the engine's shared-block counters. Returns the
+    measured coefficients (also written onto ``gen``)."""
 
     salt = [0]
+    last_req = [None]
 
     def timed(prompt_len: int, max_new: int) -> float:
         # distinct prompt per measurement: an accidental prefix-cache hit
@@ -83,6 +85,7 @@ def calibrate_generator_from_engine(
         engine.run_until_done()
         dt = time.perf_counter() - t0
         assert req.done
+        last_req[0] = req
         return dt
 
     pc = getattr(engine, "prefill_chunk_size", 0)
@@ -97,6 +100,11 @@ def calibrate_generator_from_engine(
     timed(8, decode_tokens)
     t_prefill = timed(prefill_len, 1)
     prefill_per_token = t_prefill / eff(prefill_len)
+    # chunked-prefill TTFT slope: measured from the engine's own per-request
+    # timestamps (submit -> first token) over the chunk-quantized prompt
+    ttft_req = last_req[0]
+    ttft = max(ttft_req.first_token_at - ttft_req.submitted_at, 1e-9)
+    ttft_per_token = ttft / eff(prefill_len)
 
     t_short = timed(8, decode_tokens)
     t_long = timed(long_ctx, decode_tokens)
@@ -110,6 +118,7 @@ def calibrate_generator_from_engine(
 
     coeffs = {
         "prefill_per_token_s": prefill_per_token,
+        "ttft_per_prefill_token_s": ttft_per_token,
         "decode_per_token_s": decode_short,
         "decode_cache_per_ctx_token_s": ctx_coeff,
         "prefix_hit_rate": hit_rate,

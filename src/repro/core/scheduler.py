@@ -3,35 +3,65 @@
 Requests with the least remaining slack get elevated priority; the priority
 is also propagated to the managed communication layer (StreamingObject
 chunks are flushed in priority order). Baseline engines use FIFO.
+
+Policies operate on any queue item carrying ``priority`` (predicted slack,
+smaller = more urgent) and an arrival stamp (``enqueued_at`` for simcluster
+Tasks, ``submitted_at`` for engine Requests), so one policy object serves
+both the cluster simulator's dispatch queues and the generation engine's
+admission + prefill-budget hooks (which waiting request gets admitted, and
+which mid-prefill request gets the next chunk of the step's token budget).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
-from repro.core.simcluster import Task
+
+def _arrival(item) -> float:
+    for attr in ("enqueued_at", "submitted_at"):
+        v = getattr(item, attr, None)
+        if v is not None:
+            return v
+    return 0.0
 
 
 class QueuePolicy:
     name = "fifo"
 
-    def pop(self, queue: List[Task], now: float) -> Optional[Task]:
-        if not queue:
+    def select(self, queue: Sequence, now: float = 0.0) -> Optional[int]:
+        """Index of the next item to serve (None on an empty queue)."""
+        return 0 if queue else None
+
+    def pop(self, queue: List, now: float = 0.0):
+        i = self.select(queue, now)
+        if i is None:
             return None
-        return queue.pop(0)
+        return queue.pop(i)
+
+    def order(self, items: Sequence, now: float = 0.0) -> List:
+        """Full service order under this policy (non-destructive)."""
+        rest = list(items)
+        out: List = []
+        while rest:
+            out.append(rest.pop(self.select(rest, now)))
+        return out
 
 
 class EDFSlack(QueuePolicy):
-    """Least-slack-first. Task.priority is the predicted slack (seconds);
+    """Least-slack-first. ``priority`` is the predicted slack (seconds);
     ties broken by arrival order to avoid starvation churn."""
 
     name = "edf_slack"
 
-    def pop(self, queue: List[Task], now: float) -> Optional[Task]:
+    def select(self, queue: Sequence, now: float = 0.0) -> Optional[int]:
         if not queue:
             return None
-        best = min(range(len(queue)), key=lambda i: (queue[i].priority, queue[i].enqueued_at))
-        return queue.pop(best)
+        return min(
+            range(len(queue)),
+            key=lambda i: (getattr(queue[i], "priority", 0.0), _arrival(queue[i])),
+        )
 
 
-def make_policy(name: str) -> QueuePolicy:
+def make_policy(name) -> QueuePolicy:
+    if isinstance(name, QueuePolicy):
+        return name
     return EDFSlack() if name == "edf_slack" else QueuePolicy()

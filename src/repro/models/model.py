@@ -207,18 +207,25 @@ def prefill(cfg, params, batch):
 
 def prefill_chunk(cfg, params, caches, tokens, pos):
     """Chunked prefill: run C prompt tokens (absolute positions
-    ``pos .. pos+C-1``, scalar ``pos``) against the serve cache, writing their
-    K/V entries in place. Long retrieved contexts stream through in fixed-size
-    chunks instead of being bucketed (and silently truncated) to a power of
-    two. Returns (logits (B, C, V), new caches).
+    ``pos .. pos+C-1``) against the serve cache, writing their K/V entries in
+    place. ``pos`` is a scalar, or a (B,) vector of per-row start positions —
+    the engine's fused interleaved step batches decode rows and prefill
+    chunks from different requests, each at its own cursor. Long retrieved
+    contexts stream through in fixed-size chunks instead of being bucketed
+    (and silently truncated) to a power of two. Returns
+    (logits (B, C, V), new caches).
 
     Supported for full-attention GQA stacks (``paged_cache_supported``); other
     mixers keep the whole-prompt prefill path."""
     x = embed_tokens(params["embed"], tokens)
     if (cfg.is_encoder_decoder or not cfg.use_rope) and not cfg.attention_free:
         C = x.shape[1]
-        pe = jax.vmap(lambda p_: _sinusoidal_at(p_, cfg.d_model))(pos + jnp.arange(C))
-        x = x + pe[None].astype(x.dtype)
+        sin_at = lambda p_: _sinusoidal_at(p_, cfg.d_model)
+        if jnp.ndim(pos) == 0:
+            pe = jax.vmap(sin_at)(pos + jnp.arange(C))[None]
+        else:
+            pe = jax.vmap(lambda p0: jax.vmap(sin_at)(p0 + jnp.arange(C)))(pos)
+        x = x + pe.astype(x.dtype)
     x, new_caches = tfm.run_stack_prefix(cfg, params["blocks"], x, caches, pos)
     x = tfm.apply_norm(cfg, params["final_norm"], x)
     logits = unembed(params["embed"], params.get("lm_head"), x, cfg.tie_embeddings)

@@ -231,13 +231,18 @@ def _dequantize_kv(x, cfg, dtype):
 
 
 def _cache_update(c, new, pos):
-    """Write the new token's entry at pos % Sc. c: (B, Sc, ...); new: (B, 1, ...).
-    pos may be a scalar (dry-run serve_step) or (B,) (continuous batching)."""
+    """Write new entries starting at pos % Sc. c: (B, Sc, ...); new: (B, C, ...).
+    pos may be a scalar (dry-run serve_step / single-sequence chunked prefill)
+    or (B,) per-row starts (continuous batching; the fused interleaved batch
+    mixes decode rows with C-token prefill chunks at per-row positions)."""
     Sc = c.shape[1]
     new = new.astype(c.dtype)
     if jnp.ndim(pos) == 0:
         return jax.lax.dynamic_update_slice_in_dim(c, new, pos % Sc, 1)
-    return c.at[jnp.arange(c.shape[0]), pos % Sc].set(new[:, 0])
+    if new.shape[1] == 1:
+        return c.at[jnp.arange(c.shape[0]), pos % Sc].set(new[:, 0])
+    idx = (pos[:, None] + jnp.arange(new.shape[1])) % Sc
+    return c.at[jnp.arange(c.shape[0])[:, None], idx].set(new)
 
 
 def apply_layer_decode(cfg, kind, lp, x, cache, pos, enc_out_unused=None):
@@ -333,7 +338,10 @@ def apply_layer_prefix(cfg, kind, lp, x, cache, pos):
     """Chunked prefill: x (B,C,D) of prompt tokens at absolute positions
     ``pos .. pos+C-1`` attends the cached prefix plus itself (causal). The
     chunk's K/V entries are written into the cache before attention, so the
-    returned cache is ready for the next chunk or for decode.
+    returned cache is ready for the next chunk or for decode. ``pos`` is a
+    scalar (all rows aligned) or (B,) per-row starts — the fused interleaved
+    batch runs every row at its own cursor, decode rows included (C-padded
+    chunks of one valid token).
 
     Full-attention GQA stacks only (the paged serving path); other mixers keep
     the bucketed whole-prompt prefill."""
@@ -346,9 +354,12 @@ def apply_layer_prefix(cfg, kind, lp, x, cache, pos):
             "chunked prefix prefill supports full-attention GQA stacks only"
         )
     xn = apply_norm(cfg, lp["norm1"], x)
-    positions = jnp.broadcast_to(
-        (pos + jnp.arange(C)).astype(jnp.int32)[None], (B, C)
-    )
+    if jnp.ndim(pos) == 0:
+        positions = jnp.broadcast_to(
+            (pos + jnp.arange(C)).astype(jnp.int32)[None], (B, C)
+        )
+    else:
+        positions = (pos[:, None] + jnp.arange(C)[None, :]).astype(jnp.int32)
     q, k, v = attn.qkv_project(lp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -469,18 +480,19 @@ def _segment_size(G: int) -> int:
     return best
 
 
-def run_stack_prefix(cfg, blocks, x, caches, pos_scalar):
+def run_stack_prefix(cfg, blocks, x, caches, pos):
     """Scan the layer stack in chunked-prefill mode: x (B,C,D) written into
-    (and attending) the serve cache at absolute start position ``pos_scalar``
-    (scalar; the chunk must fit inside the cache, no ring wrap)."""
+    (and attending) the serve cache at absolute start position ``pos`` —
+    scalar, or (B,) per-row starts for the fused interleaved batch (the chunk
+    must fit inside the cache, no ring wrap)."""
     p = period(cfg)
-    kinds = [layer_kind(cfg, pos) for pos in range(p)]
+    kinds = [layer_kind(cfg, i) for i in range(p)]
 
     def body(x, slices):
         block_slice, cache_slice = slices
         new_caches = []
         for i in range(p):
-            x, nc = apply_layer_prefix(cfg, kinds[i], block_slice[i], x, cache_slice[i], pos_scalar)
+            x, nc = apply_layer_prefix(cfg, kinds[i], block_slice[i], x, cache_slice[i], pos)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

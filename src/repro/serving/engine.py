@@ -23,6 +23,21 @@ Two cache backends:
   cache with power-of-two prompt buckets; architectures the paged path does
   not cover (MLA, recurrent/hybrid state, ring SWA, enc-dec, int8 cache)
   land here automatically.
+
+Scheduling (paged backend): Sarathi-style batched chunked prefill with
+decode interleaving (``interleave=True``, the default). Prefill no longer
+completes inside admission — each request carries a persistent prefill
+cursor (``Request.prefill_pos``) and every ``step()`` assembles one mixed
+batch: a decode token for every decode-phase slot plus prefill chunks from
+one or more mid-prefill slots, bounded by a per-step ``token_budget``, then
+runs a single fused forward (`models.prefill_chunk` with per-row
+start/n_valid — decode rows are chunks of one valid token). Decode slots
+therefore emit a token on every step even while a long retrieved context is
+prefilling (bounded TPOT under bursty RAG load), and TTFT stretches only by
+chunk quantization. A `core.scheduler.QueuePolicy` (FIFO or EDF-slack)
+orders both admission and the per-step prefill-budget grants.
+``interleave=False`` keeps the sequential blocking-prefill loop as the
+parity oracle; greedy decode is token-exact across the two modes.
 """
 from __future__ import annotations
 
@@ -35,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.scheduler import QueuePolicy, make_policy
 from repro.models import (
     decode_step,
     forward,
@@ -47,6 +63,7 @@ from repro.serving.paged_cache import (
     PagedKVCache,
     gather_paged_batch,
     write_paged_chunk,
+    write_paged_chunk_batch,
 )
 from repro.serving.sampler import sample_tokens
 
@@ -59,15 +76,26 @@ class Request:
     prompt: np.ndarray
     max_new: int
     temperature: float = 0.0
+    priority: float = 0.0            # predicted slack (EDF); smaller = more urgent
     out_tokens: List[int] = field(default_factory=list)
     slot: int = -1
     pos: int = 0
+    prefill_pos: int = 0             # prompt tokens already written to the cache
+    prefill_cap: int = 0             # effective prompt length (post-truncation)
     done: bool = False
     truncated: bool = False          # prompt exceeded engine capacity
     shared_prefix_tokens: int = 0    # prompt tokens served from shared blocks
+    queued_steps: int = 0            # engine steps spent waiting for admission
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
+    last_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    token_gaps: List[float] = field(default_factory=list)  # inter-token intervals
+    max_token_gap: float = 0.0       # worst inter-token stall (decode SLO signal)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.slot >= 0 and self.prefill_pos < self.prefill_cap
 
 
 def _bucket(n: int) -> int:
@@ -91,6 +119,10 @@ class GenerationEngine:
         prefill_chunk_size: int = 64,
         n_blocks: Optional[int] = None,
         prefix_sharing: bool = True,
+        interleave: bool = True,
+        token_budget: Optional[int] = None,
+        scheduler: Any = "fifo",
+        max_finished: int = 10_000,
     ):
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
@@ -101,8 +133,14 @@ class GenerationEngine:
         if backend == "paged" and not paged_cache_supported(cfg):
             backend = "dense"  # arch outside the paged contract: parity oracle path
         self.backend = backend
+        self.interleave = interleave and backend == "paged"
+        self.scheduler: QueuePolicy = make_policy(scheduler)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
+        # rolling window of completed requests backing latency_summary();
+        # bounded so a long-lived engine doesn't retain every prompt ever served
+        self.finished: List[Request] = []
+        self.max_finished = max_finished
         self._next_id = 0
         self._key = jax.random.PRNGKey(seed + 1)
         self.steps = 0
@@ -114,6 +152,9 @@ class GenerationEngine:
             self.block_size = block_size
             self.max_blocks = -(-max_seq // block_size)
             self.prefill_chunk_size = prefill_chunk_size
+            # budget for one step's valid tokens (decode rows + prefill chunks);
+            # default leaves room for every decode slot plus one full chunk
+            self.token_budget = token_budget or (max_batch + prefill_chunk_size)
             # the prefill view carries slack blocks so a padded chunk write
             # never runs past the end of the gathered cache
             self._view_blocks = self.max_blocks + -(-prefill_chunk_size // block_size)
@@ -128,17 +169,19 @@ class GenerationEngine:
             self._null_block = self.kv.pool.allocate(_NULL_SEQ, 1)[0]
             self._decode_paged_jit = jax.jit(self._decode_paged_fn)
             self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn)
+            self._fused_step_jit = jax.jit(self._fused_step_fn)
         else:
             self.cache = init_cache(cfg, max_batch, max_seq)
             self._decode_jit = jax.jit(self._decode_fn)
             self._prefill_jit: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------ API
-    def submit(self, prompt, max_new: int = 16, temperature: float = 0.0) -> Request:
+    def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
+               priority: float = 0.0) -> Request:
         prompt = np.atleast_1d(np.asarray(prompt, np.int32))
         if prompt.size == 0:
             prompt = np.zeros(1, np.int32)  # empty prompt: decode from pad token
-        req = Request(self._next_id, prompt, max_new, temperature)
+        req = Request(self._next_id, prompt, max_new, temperature, priority)
         req.submitted_at = time.monotonic()
         self._next_id += 1
         self.waiting.append(req)
@@ -152,6 +195,7 @@ class GenerationEngine:
     def stats(self) -> Dict[str, Any]:
         s: Dict[str, Any] = {
             "backend": self.backend,
+            "interleave": self.interleave,
             "steps": self.steps,
             "tokens_out": self.tokens_out,
             "prefill_tokens": self.prefill_tokens,
@@ -162,6 +206,28 @@ class GenerationEngine:
             s["prefix_hit_tokens"] = self.kv.shared_token_hits
             s["free_blocks"] = self.kv.pool.n_free
         return s
+
+    def latency_summary(self) -> Dict[str, float]:
+        """TTFT/TPOT/e2e percentiles (seconds) over finished requests — the
+        timestamps `Request` records but `stats()` aggregates away. TPOT is
+        the per-token inter-arrival distribution pooled across requests (the
+        SLO quantity: a sequential prefill stalling every decode slot shows up
+        directly as fat-tailed TPOT); ``gap_p95`` is the p95 of the
+        per-request WORST inter-token stall."""
+        done = [r for r in self.finished
+                if r.first_token_at is not None and r.finished_at is not None]
+        out: Dict[str, float] = {"n_finished": float(len(done))}
+        if not done:
+            return out
+        ttft = [r.first_token_at - r.submitted_at for r in done]
+        e2e = [r.finished_at - r.submitted_at for r in done]
+        tpot = [g for r in done for g in r.token_gaps]
+        gaps = [r.max_token_gap for r in done if len(r.out_tokens) > 1]
+        for name, xs in (("ttft", ttft), ("tpot", tpot), ("e2e", e2e), ("gap", gaps)):
+            if xs:
+                out[f"{name}_p50"] = float(np.percentile(xs, 50))
+                out[f"{name}_p95"] = float(np.percentile(xs, 95))
+        return out
 
     # ------------------------------------------------------------ admission
     def _prompt_cap(self, req: Request) -> int:
@@ -180,6 +246,7 @@ class GenerationEngine:
             req.done = True
             req.truncated = True
             req.finished_at = time.monotonic()
+            self.finished.append(req)
             return False
         n_shared = self.kv.admit_tokens(req.req_id, req.prompt[:cap])
         if n_shared is None:
@@ -210,6 +277,30 @@ class GenerationEngine:
             v_pool, table_row, start, newv, self.block_size, n_valid, self._null_block
         )
         return logits[0, n_valid - 1], k_pool, v_pool
+
+    def _fused_step_fn(self, params, k_pool, v_pool, tables, tokens, starts, n_valid):
+        """One fused interleaved step: every row is a chunk at its own cursor —
+        decode rows carry one valid token at position ``starts[b]``, prefill
+        rows carry ``n_valid[b]`` prompt tokens. Gather each row's sequence
+        view, run one batched chunked forward, scatter all rows' new K/V back
+        into the pool (padding rerouted to the scratch block), and return each
+        row's last-valid-token logits."""
+        kview = gather_paged_batch(k_pool, tables)  # (G,B,Sv,KVH,hd)
+        vview = gather_paged_batch(v_pool, tables)
+        caches = ({"k": kview, "v": vview},)
+        logits, new_caches = prefill_chunk(self.cfg, params, caches, tokens, starts)
+        B, C = tokens.shape
+        b = jnp.arange(B)
+        idx = starts[:, None] + jnp.arange(C)                 # (B, C) view slots
+        newk = new_caches[0]["k"][:, b[:, None], idx]          # (G,B,C,KVH,hd)
+        newv = new_caches[0]["v"][:, b[:, None], idx]
+        k_pool = write_paged_chunk_batch(
+            k_pool, tables, starts, newk, self.block_size, n_valid, self._null_block
+        )
+        v_pool = write_paged_chunk_batch(
+            v_pool, tables, starts, newv, self.block_size, n_valid, self._null_block
+        )
+        return logits[b, jnp.maximum(n_valid - 1, 0)], k_pool, v_pool
 
     def _decode_paged_fn(self, params, k_pool, v_pool, tables, tokens, pos):
         """Batched block-table decode: gather each slot's contiguous view
@@ -255,6 +346,8 @@ class GenerationEngine:
         self.kv.register_prefix(req.req_id, toks)
         req.slot = slot
         req.pos = cap
+        req.prefill_pos = cap
+        req.prefill_cap = cap
         self._key, sk = jax.random.split(self._key)
         tok = int(sample_tokens(sk, jnp.asarray(last)[None], req.temperature)[0])
         self._emit(req, tok)
@@ -262,7 +355,8 @@ class GenerationEngine:
     def _preempt(self, victim: Request):
         """Release a request's blocks and re-queue its continuation (prompt +
         generated tokens); re-admission re-prefills, reusing any of its own
-        prefix blocks that survived in the warm cache."""
+        prefix blocks that survived in the warm cache. A mid-prefill victim
+        restarts its cursor from scratch (its partial K/V is discarded)."""
         self.kv.release(victim.req_id)
         if victim.slot >= 0 and self.slots[victim.slot] is victim:
             self.slots[victim.slot] = None
@@ -272,15 +366,20 @@ class GenerationEngine:
              np.asarray(victim.out_tokens, np.int32)]
         )
         victim.shared_prefix_tokens = 0
+        victim.prefill_pos = 0
+        victim.prefill_cap = 0
         self.waiting.insert(0, victim)
         self.preemptions += 1
 
     def _ensure_decode_capacity(self):
-        """Every active slot needs a block backing its next write position;
-        preempt youngest-first when the pool runs dry."""
+        """Every decode-phase slot needs a block backing its next write
+        position (mid-prefill slots hold their full allocation from
+        admission); preempt youngest-first when the pool runs dry."""
         for r in [r for r in self.slots if r is not None]:
             if r.slot < 0 or self.slots[r.slot] is not r:
                 continue  # already preempted this round
+            if r.prefilling:
+                continue
             while True:
                 try:
                     self.kv.pool.extend_for(r.req_id, r.pos + 1)
@@ -313,6 +412,8 @@ class GenerationEngine:
         self.prefill_tokens += eff
         req.slot = slot
         req.pos = eff  # NOT Lp: a truncated prompt must not overrun its cache
+        req.prefill_pos = eff
+        req.prefill_cap = eff
         last = np.asarray(logits)[0, eff - 1]
         self._key, sk = jax.random.split(self._key)
         tok = int(sample_tokens(sk, jnp.asarray(last[None]), req.temperature)[0])
@@ -320,18 +421,28 @@ class GenerationEngine:
 
     # ------------------------------------------------------------- stepping
     def step(self) -> Dict[int, List[int]]:
-        """One engine iteration: admit waiting requests, one batched decode."""
+        """One engine iteration. Interleaved paged mode: admit, then one fused
+        mixed batch (decode rows + budgeted prefill chunks). Sequential mode:
+        admit (blocking whole-prompt prefill), then one batched decode."""
+        for r in self.waiting:
+            r.queued_steps += 1
+        if self.interleave:
+            return self._step_interleaved()
+        return self._step_sequential()
+
+    def _step_sequential(self) -> Dict[int, List[int]]:
         blocked = False
         for slot in range(self.max_batch):
             while self.slots[slot] is None and self.waiting and not blocked:
-                req = self.waiting[0]
+                i = self.scheduler.select(self.waiting)
+                req = self.waiting[i]
                 if not self._try_admit(req):
                     if req.done:  # unfittable request failed out; try the next
-                        self.waiting.pop(0)
+                        self.waiting.pop(i)
                         continue
-                    blocked = True  # FIFO admission: head-of-line waits for blocks
+                    blocked = True  # the policy's head-of-line waits for blocks
                     break
-                self.waiting.pop(0)
+                self.waiting.pop(i)
                 self.slots[slot] = req
                 if self.backend == "paged":
                     self._prefill_paged(req, slot)
@@ -343,7 +454,131 @@ class GenerationEngine:
         active = [r for r in self.slots if r is not None]
         if not active:
             return {}
+        return self._decode_batch(active)
 
+    def _step_interleaved(self) -> Dict[int, List[int]]:
+        self._admit_interleaved()
+        self._ensure_decode_capacity()
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return {}
+        prefill_rows = sorted((r for r in active if r.prefilling),
+                              key=lambda r: r.req_id)
+        if not prefill_rows:
+            return self._decode_batch(active)
+        decode_rows = [r for r in active if not r.prefilling]
+
+        # ---- token-budget grants: decode rows reserve one token each; the
+        # remaining budget goes to mid-prefill rows in policy order (always
+        # at least one token, so prefill can never fully starve)
+        budget = max(self.token_budget - len(decode_rows), 1)
+        grants: Dict[int, int] = {}
+        for r in self.scheduler.order(prefill_rows):
+            if budget <= 0:
+                break
+            c = min(self.prefill_chunk_size, r.prefill_cap - r.prefill_pos, budget)
+            grants[r.req_id] = c
+            budget -= c
+
+        # ---- compose the fused batch: every row a chunk at its own cursor
+        B, C = self.max_batch, self.prefill_chunk_size
+        tokens = np.zeros((B, C), np.int32)
+        starts = np.zeros((B,), np.int32)
+        n_valid = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        tables = np.full((B, self._view_blocks), self._null_block, np.int32)
+        rows = self.kv.pool.table_array([r.req_id for r in active], self._view_blocks)
+        for i, r in enumerate(active):
+            backed = rows[i] >= 0
+            tables[r.slot, backed] = rows[i][backed]
+            temps[r.slot] = r.temperature
+            if r.prefilling:
+                c = grants.get(r.req_id, 0)
+                tokens[r.slot, :c] = r.prompt[r.prefill_pos : r.prefill_pos + c]
+                starts[r.slot] = r.prefill_pos
+                n_valid[r.slot] = c
+            else:
+                tokens[r.slot, 0] = r.out_tokens[-1] if r.out_tokens else 0
+                starts[r.slot] = r.pos
+                n_valid[r.slot] = 1
+
+        logits, self.kv.k, self.kv.v = self._fused_step_jit(
+            self.params, self.kv.k, self.kv.v, jnp.asarray(tables),
+            jnp.asarray(tokens), jnp.asarray(starts), jnp.asarray(n_valid),
+        )
+        self.steps += 1
+        self._key, sk = jax.random.split(self._key)
+        toks = np.asarray(sample_tokens(sk, logits, jnp.asarray(temps)))
+
+        emitted: Dict[int, List[int]] = {}
+        for r in decode_rows:
+            tok = int(toks[r.slot])
+            r.pos += 1
+            self.kv.lengths[r.req_id] = r.pos
+            self._emit(r, tok)
+            emitted.setdefault(r.req_id, []).append(tok)
+        for r in prefill_rows:
+            c = grants.get(r.req_id, 0)
+            if c == 0:
+                continue  # no budget this step; cursor holds
+            r.prefill_pos += c
+            self.prefill_tokens += c
+            self.kv.lengths[r.req_id] = r.prefill_pos
+            if r.prefill_pos >= r.prefill_cap:
+                # prefill complete: publish prompt blocks, sample first token
+                self.kv.register_prefix(
+                    r.req_id, np.asarray(r.prompt[: r.prefill_cap], np.int32)
+                )
+                r.pos = r.prefill_cap
+                tok = int(toks[r.slot])
+                self._emit(r, tok)
+                emitted.setdefault(r.req_id, []).append(tok)
+        return emitted
+
+    def _admit_interleaved(self):
+        """Fill free slots from the waiting queue in policy order, allocating
+        blocks only — prefill itself runs inside later step() batches via the
+        request's cursor."""
+        free = [s for s in range(self.max_batch) if self.slots[s] is None]
+        while free and self.waiting:
+            i = self.scheduler.select(self.waiting)
+            req = self.waiting[i]
+            if self._prefix_pending(req):
+                break  # leader still prefilling this prefix; wait to share it
+            if not self._try_admit(req):
+                if req.done:  # unfittable request failed out; try the next
+                    self.waiting.pop(i)
+                    continue
+                break  # the policy's head-of-line waits for blocks
+            self.waiting.pop(i)
+            slot = free.pop(0)
+            cap = self._prompt_cap(req)
+            req.truncated = cap < len(req.prompt)
+            req.prefill_cap = cap
+            req.prefill_pos = req.shared_prefix_tokens  # shared blocks carry K/V
+            req.slot = slot
+            self.slots[slot] = req
+
+    def _prefix_pending(self, req: Request) -> bool:
+        """True while an active request is still mid-prefill on a prompt that
+        shares this request's first cache block. Deferring admission until the
+        leader publishes its prefix blocks lets a same-context RAG burst reuse
+        them instead of re-running the shared prefill (prefill spans steps
+        now, so admission can no longer rely on the leader having finished)."""
+        if not self.kv.prefix_sharing:
+            return False
+        bs = self.block_size
+        if len(req.prompt) <= bs:
+            return False
+        head = np.asarray(req.prompt[:bs])
+        for r in self.slots:
+            if (r is not None and r.prefilling and len(r.prompt) >= bs
+                    and np.array_equal(np.asarray(r.prompt[:bs]), head)):
+                return True
+        return False
+
+    def _decode_batch(self, active: List[Request]) -> Dict[int, List[int]]:
+        """One batched decode over the active decode-phase slots."""
         tokens = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
         temps = np.zeros((self.max_batch,), np.float32)
@@ -382,8 +617,13 @@ class GenerationEngine:
         return emitted
 
     def _emit(self, req: Request, tok: int):
+        now = time.monotonic()
         if req.first_token_at is None:
-            req.first_token_at = time.monotonic()
+            req.first_token_at = now
+        elif req.last_token_at is not None:
+            req.token_gaps.append(now - req.last_token_at)
+            req.max_token_gap = max(req.max_token_gap, now - req.last_token_at)
+        req.last_token_at = now
         req.out_tokens.append(tok)
         self.tokens_out += 1
         if (
@@ -392,7 +632,10 @@ class GenerationEngine:
             or req.pos >= self.max_seq - 1
         ):
             req.done = True
-            req.finished_at = time.monotonic()
+            req.finished_at = now
+            self.finished.append(req)
+            if len(self.finished) > self.max_finished:
+                del self.finished[: -self.max_finished]
             if req.slot >= 0 and self.slots[req.slot] is req:
                 self.slots[req.slot] = None
             if self.backend == "paged":

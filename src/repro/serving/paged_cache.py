@@ -159,6 +159,31 @@ def write_paged_chunk(pool_kv, block_table_row, start, new_kv, block_size: int,
     return flat.reshape(pool_kv.shape)
 
 
+def write_paged_chunk_batch(pool_kv, block_tables, starts, new_kv, block_size: int,
+                            n_valid=None, null_dest: int = 0):
+    """Multi-row chunk scatter: write B sequences' C-token chunks in one
+    update (the fused interleaved-step path — decode rows are chunks with
+    ``n_valid == 1``).
+
+    pool_kv: (G, n_blocks, bs, KVH, hd); block_tables: (B, mb) int32;
+    starts/n_valid: (B,) absolute start position and valid-token count per
+    row; new_kv: (G, B, C, KVH, hd). Rows' padding tokens (index >= n_valid)
+    are routed to slot 0 of the ``null_dest`` scratch block, so duplicate
+    scratch writes may race — nothing ever reads the scratch block."""
+    G, nb, bs = pool_kv.shape[0], pool_kv.shape[1], pool_kv.shape[2]
+    B, C = new_kv.shape[1], new_kv.shape[2]
+    pos = starts[:, None] + jnp.arange(C)                      # (B, C)
+    blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)
+    dest = jnp.maximum(blk, 0) * bs + pos % bs
+    if n_valid is not None:
+        dest = jnp.where(jnp.arange(C)[None, :] < n_valid[:, None], dest, null_dest * bs)
+    flat = pool_kv.reshape(G, nb * bs, *pool_kv.shape[3:])
+    flat = flat.at[:, dest.reshape(-1)].set(
+        new_kv.reshape(G, B * C, *new_kv.shape[3:]).astype(flat.dtype)
+    )
+    return flat.reshape(pool_kv.shape)
+
+
 def gather_paged(pool_kv, block_table_row, max_blocks: int):
     """Materialize a sequence's contiguous cache view from its pages:
     (G, max_blocks*block_size, KVH, hd). Unallocated pages read block 0 and

@@ -1,0 +1,103 @@
+"""Randomized engine invariant harness: seeded bursty workloads (mixed fresh
+and shared-prefix prompts, tiny block pools forcing preemption, FIFO and
+EDF-slack admission) must drain leaving the paged pool pristine — zero leaked
+blocks, scratch-block refcount intact, every non-truncated request holding
+exactly max_new tokens, and bounded admission queue age (no starvation)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.serving.engine import _NULL_SEQ, GenerationEngine
+
+
+def _cfg():
+    return smoke_variant(get_arch("smollm-135m"))
+
+
+def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
+                  long_decode: bool = False):
+    """Bursty seeded workload: waves of submits interleaved with engine steps.
+    Prompts mix fresh random sequences with shared-retrieved-context prefixes
+    (32 tokens = 2 full blocks at block_size=16). ``long_decode`` makes
+    decode runs outgrow admission's slack block, forcing mid-decode pool
+    exhaustion (preemption) on tiny pools."""
+    rng = np.random.default_rng(seed)
+    eng = GenerationEngine(
+        _cfg(), max_batch=3, max_seq=96, n_blocks=n_blocks,
+        prefill_chunk_size=16, token_budget=20,
+        scheduler=scheduler, interleave=interleave,
+    )
+    ctx = rng.integers(0, 90, size=32).astype(np.int32)
+    reqs = []
+    for _ in range(4):  # bursts
+        for _ in range(int(rng.integers(1, 4))):
+            if long_decode:
+                prompt = rng.integers(0, 90, size=int(rng.integers(3, 13)))
+                max_new = int(rng.integers(28, 39))
+            else:
+                if rng.random() < 0.4:  # shared-prefix RAG request
+                    tail = rng.integers(0, 90, size=int(rng.integers(1, 12)))
+                    prompt = np.concatenate([ctx, tail])
+                else:
+                    prompt = rng.integers(0, 90, size=int(rng.integers(3, 45)))
+                max_new = int(rng.integers(2, 9))
+            reqs.append(eng.submit(
+                prompt,
+                max_new=max_new,
+                temperature=float(rng.choice([0.0, 0.0, 0.8])),
+                priority=float(rng.random()),
+            ))
+        for _ in range(int(rng.integers(0, 4))):  # partial progress mid-burst
+            eng.step()
+    eng.run_until_done(max_steps=2000)
+    return eng, reqs
+
+
+@pytest.mark.parametrize(
+    "seed,n_blocks,scheduler,interleave,long_decode",
+    [
+        (0, None, "fifo", True, False),       # fully provisioned pool
+        (1, None, "edf_slack", True, False),  # EDF admission + prefill grants
+        (2, 8, "fifo", True, False),          # tiny pool: admission backpressure
+        (3, 8, "fifo", False, False),         # sequential oracle under pressure
+        (4, 10, "edf_slack", True, False),
+        (5, 6, "fifo", True, True),           # long decodes: mid-decode preemption
+    ],
+)
+def test_engine_invariants_after_drain(seed, n_blocks, scheduler, interleave,
+                                       long_decode):
+    eng, reqs = _run_workload(
+        seed, n_blocks=n_blocks, scheduler=scheduler, interleave=interleave,
+        long_decode=long_decode,
+    )
+    if long_decode:
+        assert eng.preemptions >= 1  # the tiny pool must actually churn
+
+    # every request drained
+    assert all(r.done for r in reqs)
+    assert not eng.waiting and not any(eng.slots)
+
+    # zero leaked blocks: everything is free/warm-cached except the scratch
+    pool = eng.kv.pool
+    assert pool.n_free == pool.n_blocks - 1
+    # scratch block intact: still owned by the null sequence, refcount 1,
+    # and the only live refcount in the pool
+    assert pool.tables == {_NULL_SEQ: [eng._null_block]}
+    assert pool.refcounts == {eng._null_block: 1}
+    assert eng.kv.lengths == {}
+
+    # completion contract: eos_token=-1 never fires (sampled ids >= 0) and
+    # max_seq is sized so no prompt+decode run hits the position cap, so
+    # every non-truncated request holds exactly max_new tokens
+    for r in reqs:
+        assert r.first_token_at is not None and r.finished_at is not None
+        if not r.truncated:
+            assert len(r.out_tokens) == r.max_new, r.req_id
+            assert r.pos < eng.max_seq - 1 or len(r.out_tokens) == r.max_new
+
+    # accounting lines up across the engine counters
+    assert eng.tokens_out == sum(len(r.out_tokens) for r in reqs)
+
+    # no starvation: bounded admission queue age (in engine steps)
+    assert max(r.queued_steps for r in reqs) <= 300
+    assert len(eng.finished) == len(reqs)

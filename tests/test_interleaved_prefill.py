@@ -1,0 +1,172 @@
+"""Sarathi-style interleaved chunked prefill: token-exact parity against the
+sequential-prefill oracle, per-step decode progress during long prefills,
+token-budget accounting, and the chunked-prefill TTFT cost-model term."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.core.components import Generator
+from repro.core.profiling import calibrate_generator_from_engine
+from repro.serving.engine import GenerationEngine
+
+
+def _cfg():
+    return smoke_variant(get_arch("smollm-135m"))
+
+
+def _prompts(seed: int, chunk: int):
+    """Seeded random mix straddling the chunk size: shorter than one chunk,
+    exactly one chunk, and spanning several chunks."""
+    rng = np.random.default_rng(seed)
+    lengths = [3, chunk // 2, chunk, chunk + 1, 3 * chunk + 5]
+    return [rng.integers(0, 90, size=n).astype(np.int32) for n in lengths]
+
+
+# ------------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize(
+    "chunk,budget",
+    [(16, 20), (32, 36), (32, None)],  # None: default budget (max_batch + chunk)
+)
+def test_interleaved_matches_sequential_token_exact(chunk, budget):
+    """Greedy decode must be token-exact between interleaved and sequential
+    prefill, across chunk sizes and token budgets."""
+    cfg = _cfg()
+    prompts = _prompts(seed=chunk, chunk=chunk)
+    outs = {}
+    for interleave in (False, True):
+        eng = GenerationEngine(
+            cfg, max_batch=3, max_seq=256, prefill_chunk_size=chunk,
+            token_budget=budget, interleave=interleave,
+        )
+        reqs = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        outs[interleave] = [r.out_tokens for r in reqs]
+    assert outs[True] == outs[False]
+
+
+def test_interleaved_matches_dense_oracle():
+    cfg = _cfg()
+    prompts = _prompts(seed=7, chunk=32)
+    outs = {}
+    for backend in ("dense", "paged"):
+        eng = GenerationEngine(cfg, max_batch=3, max_seq=256, backend=backend,
+                               prefill_chunk_size=32)
+        reqs = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run_until_done()
+        outs[backend] = [r.out_tokens for r in reqs]
+    assert outs["paged"] == outs["dense"]
+
+
+# -------------------------------------------------------- decode progress
+
+
+def test_decode_emits_every_step_during_long_prefill():
+    """The acceptance bar: a decode-active request must emit one token per
+    step while a long prompt prefills — no multi-step decode stall."""
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=256, prefill_chunk_size=16,
+                           token_budget=17)
+    a = eng.submit(np.arange(5) % 90, max_new=40)
+    for _ in range(3):
+        eng.step()  # a is decoding
+    assert not a.done and len(a.out_tokens) >= 3
+    b = eng.submit(np.arange(120) % 90 + 1, max_new=4)  # 120 tokens / 16-chunks
+    prefill_steps = 0
+    while b.first_token_at is None:
+        n_before = len(a.out_tokens)
+        eng.step()
+        if b.prefilling:
+            prefill_steps += 1
+        assert len(a.out_tokens) == n_before + 1, "decode stalled during prefill"
+    assert prefill_steps >= 4, "long prompt must prefill across multiple steps"
+    eng.run_until_done()
+    assert a.done and b.done and len(b.out_tokens) == 4
+
+
+def test_sequential_prefill_stalls_decode_oracle():
+    """Sanity on the A/B: with interleave=False the same workload DOES stall
+    the decode slot for the whole prefill (that is what interleaving fixes)."""
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=256, prefill_chunk_size=16,
+                           interleave=False)
+    a = eng.submit(np.arange(5) % 90, max_new=40)
+    for _ in range(3):
+        eng.step()
+    b = eng.submit(np.arange(120) % 90 + 1, max_new=4)
+    eng.step()  # admission runs the whole 120-token prefill inside this step
+    assert b.first_token_at is not None  # blocking prefill finished in one step
+    assert b.prefill_pos == b.prefill_cap
+
+
+def test_token_budget_bounds_per_step_prefill():
+    """Each step's granted prefill tokens obey the budget net of decode rows."""
+    cfg = _cfg()
+    budget = 24
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=256, prefill_chunk_size=64,
+                           token_budget=budget)
+    a = eng.submit(np.arange(4) % 90, max_new=30)
+    eng.step()  # a prefills + emits
+    b = eng.submit(np.arange(100) % 90 + 2, max_new=2)
+    while b.first_token_at is None:
+        before = b.prefill_pos
+        eng.step()
+        n_decode = 1 if not a.done else 0
+        assert b.prefill_pos - before <= max(budget - n_decode, 1)
+    eng.run_until_done()
+    assert a.done and b.done
+
+
+def test_interleaved_partial_prefill_preemption_recovers():
+    """Preempting a mid-prefill victim must reset its cursor and still yield
+    the unconstrained greedy tokens after re-admission."""
+    cfg = _cfg()
+    prompts = [np.arange(30) % 90, np.arange(30) % 90 + 1]
+    big = GenerationEngine(cfg, max_batch=2, max_seq=64)
+    want = []
+    for p in prompts:
+        r = big.submit(p, max_new=24)
+        big.run_until_done()
+        want.append(r.out_tokens)
+
+    small = GenerationEngine(cfg, max_batch=2, max_seq=64, n_blocks=8,
+                             prefix_sharing=False, prefill_chunk_size=16,
+                             token_budget=18)
+    got = [small.submit(p, max_new=24) for p in prompts]
+    small.run_until_done(max_steps=500)
+    assert all(r.done for r in got)
+    assert small.preemptions >= 1
+    assert [r.out_tokens for r in got] == want
+
+
+# ------------------------------------------------------ latency + cost model
+
+
+def test_latency_summary_reports_percentiles():
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=128)
+    reqs = [eng.submit(np.arange(8 + i) % 90, max_new=5) for i in range(3)]
+    eng.run_until_done()
+    lat = eng.latency_summary()
+    assert lat["n_finished"] == 3
+    for key in ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95",
+                "e2e_p50", "e2e_p95", "gap_p95"):
+        assert key in lat and lat[key] >= 0.0
+    assert lat["ttft_p50"] <= lat["e2e_p95"]
+    assert all(r.first_token_at >= r.submitted_at for r in reqs)
+
+
+def test_generator_ttft_term_calibrates_from_interleaved_engine():
+    cfg = _cfg()
+    eng = GenerationEngine(cfg, max_batch=1, max_seq=128)
+    gen = Generator(engine=eng)
+    coeffs = calibrate_generator_from_engine(gen, eng)
+    assert coeffs["ttft_per_prefill_token_s"] > 0
+    assert gen.ttft_per_prefill_token_s == coeffs["ttft_per_prefill_token_s"]
+    short = gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 0})
+    long = gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 5000})
+    assert long > short
+    gen.calibrate({"prefix_hit_rate": 0.9})
+    assert gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 5000}) < long

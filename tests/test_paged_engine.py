@@ -136,7 +136,8 @@ def test_prefix_sharing_refcounts_and_hits():
     ctx = np.arange(48) % 90  # 3 full blocks at block_size=16
     a = eng.submit(np.concatenate([ctx, [1, 2, 3]]), max_new=64)  # stays active
     b = eng.submit(np.concatenate([ctx, [9, 8, 7]]), max_new=4)
-    eng.step()  # admit + prefill both, one decode
+    eng.step()  # admit + prefill a; b defers until a publishes the prefix
+    eng.step()  # admit b sharing a's context blocks; b prefills its tail
     assert eng.kv.shared_token_hits == 48
     table_a = eng.kv.pool.tables[a.req_id]
     table_b = eng.kv.pool.tables[b.req_id]
