@@ -1,0 +1,67 @@
+"""Shared benchmark reporting + CLI helpers.
+
+Deduplicates the latency-table code the serving benchmarks used to copy from
+each other, and gives every benchmark entry point a uniform ``--smoke`` flag
+(tiny model / few requests) so CI can execute them all without letting the
+entry points rot.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+LAT_KEYS = ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95", "gap_p95", "e2e_p95")
+
+
+def smoke_flag(description: str = "", argv: Optional[Sequence[str]] = None) -> bool:
+    """Uniform benchmark CLI: ``--smoke`` runs the tiny configuration (CI
+    executes every benchmark this way)."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny model / few requests: fast smoke run for CI",
+    )
+    return ap.parse_args(argv).smoke
+
+
+def latency_row(summary: Dict[str, float], keys: Sequence[str] = LAT_KEYS) -> Dict[str, float]:
+    """Project an engine ``latency_summary()`` onto the standard columns."""
+    return {k: float(summary.get(k, float("nan"))) for k in keys}
+
+
+def _fmt(v, width: int) -> str:
+    if isinstance(v, str):
+        return f"{v:>{width}}"
+    if isinstance(v, int):
+        return f"{v:>{width}d}"
+    if v is None or (isinstance(v, float) and math.isnan(v)):
+        return f"{'-':>{width}}"
+    return f"{v:>{width}.4f}"
+
+
+def print_table(rows: Iterable[Dict], cols: Sequence[str], width: int = 12) -> None:
+    """Aligned fixed-width table over dict rows (missing keys print '-')."""
+    print(" ".join(f"{c:>{width}}" for c in cols))
+    for r in rows:
+        print(" ".join(_fmt(r.get(c), width) for c in cols))
+
+
+def print_latency_ms(rows: Iterable[Dict], label_key: str,
+                     keys: Sequence[str] = LAT_KEYS, width: int = 10) -> None:
+    """Latency percentile table in milliseconds, one row per engine/mode."""
+    print(f"\nlatency (ms):")
+    print(f"{label_key:>12} " + " ".join(f"{k:>{width}}" for k in keys))
+    for r in rows:
+        vals = []
+        for k in keys:
+            v = r.get(k, float("nan"))
+            vals.append(
+                f"{'-':>{width}}" if (v is None or math.isnan(v))
+                else f"{v * 1e3:>{width}.2f}"
+            )
+        print(f"{str(r.get(label_key, '')):>12} " + " ".join(vals))

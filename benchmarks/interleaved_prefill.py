@@ -8,15 +8,16 @@ emit a token every step. Reports TTFT/TPOT/e2e percentiles (the engine's
 latency_summary), worst inter-token gap, and throughput for both modes,
 taking per-metric medians over several trials to damp CPU timing noise.
 
-    PYTHONPATH=src python benchmarks/interleaved_prefill.py
+    PYTHONPATH=src python benchmarks/interleaved_prefill.py [--smoke]
 """
 from __future__ import annotations
 
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+try:
+    from _report import LAT_KEYS, latency_row, print_table, smoke_flag
+except ImportError:  # imported as a package module (benchmarks.run)
+    from benchmarks._report import LAT_KEYS, latency_row, print_table, smoke_flag
 
 import jax
 import numpy as np
@@ -25,17 +26,17 @@ from repro.configs import get_arch, smoke_variant
 from repro.models import init_params
 from repro.serving.engine import GenerationEngine
 
-LAT_KEYS = ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95", "gap_p95", "e2e_p95")
 
-
-def make_workload(seed: int = 0):
+def make_workload(seed: int = 0, smoke: bool = False):
     """(decode-active requests, long-prefill burst): the decoders are short
     prompts generating long outputs; the burst carries long retrieved
     contexts with short generations (classic RAG shape). Distinct seeds give
     distinct contexts so repeat trials never hit the warm prefix cache."""
     rng = np.random.default_rng(seed)
-    decoders = [(rng.integers(0, 400, size=8), 48) for _ in range(3)]
-    burst = [(rng.integers(0, 400, size=160), 8) for _ in range(3)]
+    n_dec = 48 if not smoke else 12
+    ctx = 160 if not smoke else 96
+    decoders = [(rng.integers(0, 400, size=8), n_dec) for _ in range(3)]
+    burst = [(rng.integers(0, 400, size=ctx), 8) for _ in range(3)]
     return decoders, burst
 
 
@@ -63,37 +64,31 @@ def run_trial(eng, decoders, burst, lead_steps: int = 6):
     wall = time.perf_counter() - t0
     assert all(r.done for r in reqs)
     out_tokens = sum(len(r.out_tokens) for r in reqs)
-    lat = eng.latency_summary()
     return {
         "wall_s": wall,
         "tok_per_s": out_tokens / wall,
         "steps": eng.stats()["steps"] - steps0,
-        **{k: lat.get(k, float("nan")) for k in LAT_KEYS},
+        **latency_row(eng.latency_summary()),
     }
 
 
-def run_mode(interleave: bool, cfg, params, trials: int = 3):
+def run_mode(interleave: bool, cfg, params, trials: int = 3, smoke: bool = False):
     eng = make_engine(interleave, cfg, params)
-    rows = [run_trial(eng, *make_workload(seed)) for seed in range(trials)]
+    rows = [run_trial(eng, *make_workload(seed, smoke)) for seed in range(trials)]
     med = {k: float(np.median([r[k] for r in rows])) for k in rows[0]}
     med["mode"] = "interleaved" if interleave else "sequential"
     med["steps"] = int(med["steps"])
     return med
 
 
-def main():
+def main(smoke: bool = False):
     cfg = smoke_variant(get_arch("smollm-135m"))
     params = init_params(cfg, jax.random.PRNGKey(0))
 
-    rows = [run_mode(il, cfg, params) for il in (False, True)]
+    trials = 1 if smoke else 3
+    rows = [run_mode(il, cfg, params, trials, smoke) for il in (False, True)]
 
-    cols = ("mode", "wall_s", "tok_per_s", "steps") + LAT_KEYS
-    print(" ".join(f"{c:>12}" for c in cols))
-    for r in rows:
-        print(" ".join(
-            f"{r[c]:>12}" if isinstance(r[c], (str, int)) else f"{r[c]:>12.4f}"
-            for c in cols
-        ))
+    print_table(rows, ("mode", "wall_s", "tok_per_s", "steps") + LAT_KEYS)
     seq, il = rows
     if il["tpot_p95"] < seq["tpot_p95"]:
         print(f"\np95 TPOT: interleaved {il['tpot_p95']*1e3:.2f} ms vs "
@@ -105,4 +100,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke=smoke_flag(__doc__))

@@ -25,4 +25,8 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    try:
+        from _report import smoke_flag
+    except ImportError:
+        from benchmarks._report import smoke_flag
+    main(fast=smoke_flag(__doc__))

@@ -5,15 +5,16 @@ weights and the same workload, plus the paged-only wins: admission-controlled
 memory (pool utilization) and prefix-block sharing across RAG requests that
 embed the same retrieved context.
 
-    PYTHONPATH=src python benchmarks/paged_vs_dense.py
+    PYTHONPATH=src python benchmarks/paged_vs_dense.py [--smoke]
 """
 from __future__ import annotations
 
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+try:
+    from _report import latency_row, print_latency_ms, smoke_flag
+except ImportError:  # imported as a package module (benchmarks.run)
+    from benchmarks._report import latency_row, print_latency_ms, smoke_flag
 
 import jax
 import numpy as np
@@ -48,7 +49,6 @@ def run_backend(backend: str, cfg, params, workload, max_batch: int, max_seq: in
     assert all(r.done for r in reqs)
     out_tokens = sum(len(r.out_tokens) for r in reqs)
     stats = eng.stats()
-    lat = eng.latency_summary()
     return {
         "backend": eng.backend,
         "wall_s": wall,
@@ -58,18 +58,18 @@ def run_backend(backend: str, cfg, params, workload, max_batch: int, max_seq: in
         "prefill_tokens": stats["prefill_tokens"],
         "prefix_hit_tokens": stats.get("prefix_hit_tokens", 0),
         "preemptions": stats.get("preemptions", 0),
-        "ttft_p50": lat.get("ttft_p50", float("nan")),
-        "ttft_p95": lat.get("ttft_p95", float("nan")),
-        "tpot_p50": lat.get("tpot_p50", float("nan")),
-        "tpot_p95": lat.get("tpot_p95", float("nan")),
+        **latency_row(eng.latency_summary(),
+                      ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95")),
     }
 
 
-def main():
+def main(smoke: bool = False):
     cfg = smoke_variant(get_arch("smollm-135m"))
     params = init_params(cfg, jax.random.PRNGKey(0))
     max_batch, max_seq = 4, 256
-    workload = make_workload(n_requests=12, ctx_len=96, tail_len=8, max_new=24)
+    n_requests, max_new = (4, 8) if smoke else (12, 24)
+    workload = make_workload(n_requests=n_requests, ctx_len=96, tail_len=8,
+                             max_new=max_new)
 
     rows = [run_backend(b, cfg, params, workload, max_batch, max_seq)
             for b in ("dense", "paged")]
@@ -83,13 +83,8 @@ def main():
               f"{r['tok_per_s']:>8.1f} {r['decode_steps']:>6d} "
               f"{r['prefill_tokens']:>12d} {r['prefix_hit_tokens']:>12d} "
               f"{r['preemptions']:>8d}")
-    print("\nlatency (ms):")
-    print(f"{'backend':>8} {'ttft_p50':>10} {'ttft_p95':>10} "
-          f"{'tpot_p50':>10} {'tpot_p95':>10}")
-    for r in rows:
-        print(f"{r['backend']:>8} " + " ".join(
-            f"{r[k] * 1e3:>10.2f}" for k in
-            ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95")))
+    print_latency_ms(rows, "backend",
+                     ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95"))
     dense, paged = rows
     print(f"\npaged/dense throughput: {paged['tok_per_s'] / dense['tok_per_s']:.2f}x")
     saved = dense["prefill_tokens"] - paged["prefill_tokens"]
@@ -99,4 +94,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke=smoke_flag(__doc__))

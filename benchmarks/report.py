@@ -62,7 +62,8 @@ def roofline_table():
 
 
 if __name__ == "__main__":
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    args = [a for a in sys.argv[1:] if a != "--smoke"]  # table renderer: no-op
+    which = args[0] if args else "all"
     if which in ("all", "dryrun"):
         print(dryrun_table("dryrun_results.jsonl", "Single-pod mesh (16×16 = 256 chips)"))
         print()

@@ -17,9 +17,11 @@ import numpy as np
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for the default fast mode (uniform bench CLI)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
-    fast = not args.full
+    fast = not args.full or args.smoke
 
     from benchmarks import (
         ablations,

@@ -41,12 +41,23 @@ def solve_allocation(
     budgets: Dict[str, float],
     min_instances: Optional[Dict[str, int]] = None,
     source_rate: Optional[float] = None,
+    alpha_scale: Optional[Dict[str, float]] = None,
+    resource_penalty: float = 0.0,
 ) -> AllocationPlan:
     """Solve the Fig. 8 LP for the captured workflow graph.
 
     ``budgets``: total units per resource type (e.g. {"GPU": 32, "CPU": 256}).
     ``source_rate``: if given, cap offered load (useful for what-if queries);
     otherwise maximize achievable throughput.
+    ``alpha_scale``: per-component capacity multipliers applied to the fitted
+    alpha — the retrieval-aware cache feedback path: a Generator whose
+    measured prefix hit rate makes requests cheaper gets alpha scaled up
+    (``profiling.generator_alpha_scale``), so the LP provisions fewer
+    replicas for the same load as cache effectiveness shifts.
+    ``resource_penalty``: tiny per-resource-unit objective cost; with a
+    ``source_rate`` cap the throughput optimum is degenerate in resources, so
+    a nonzero penalty makes the solver return the *cheapest* optimal plan
+    (visible replica savings) instead of an arbitrary vertex.
     """
     t0 = time.perf_counter()
     comps = graph.component_names()
@@ -72,11 +83,13 @@ def solve_allocation(
     def rvar(i, j):
         return m + i * k + j
 
-    # objective: maximize flow into SINK
+    # objective: maximize flow into SINK (minus an optional tiny resource cost)
     c = np.zeros(nvar)
     for (s, d), ei in edge_idx.items():
         if d == SINK:
             c[ei] = -1.0
+    if resource_penalty:
+        c[m:] += resource_penalty
 
     A_ub, b_ub, A_eq, b_eq = [], [], [], []
 
@@ -97,8 +110,9 @@ def solve_allocation(
             if d == comp:
                 row[ei] = amp
         meta = graph.nodes[comp]
+        scale = (alpha_scale or {}).get(comp, 1.0)
         for j, rt in enumerate(res_types):
-            alpha = meta.alpha.get(rt, 0.0)
+            alpha = meta.alpha.get(rt, 0.0) * scale
             row[rvar(ci, j)] = -alpha
         A_ub.append(row)
         b_ub.append(0.0)

@@ -80,12 +80,18 @@ class Retriever(Component):
         self.n_probe = n_probe
 
     def retrieve(self, query, k: int = 100):
+        """Returns a ``ScoredDocs``: doc ids (list-compatible, what callers
+        always consumed) plus relevance scores — the ids flow through
+        Reranker/Augmenter into the Generator's SegmentedPrompt so KV reuse
+        can be keyed by document identity."""
+        from repro.serving.retrieval import ScoredDocs
+
         self._record()
         if self.index is not None:
             qv = _embed_query(query, self.index.embeddings.shape[1])
             scores, ids = self.index.search(qv, k=min(k, self.index.size), n_probe=self.n_probe)
-            return list(np.asarray(ids)[0])
-        return list(range(k))
+            return ScoredDocs(np.asarray(ids)[0], np.asarray(scores)[0])
+        return ScoredDocs(range(k), [1.0 / (r + 1) for r in range(k)])
 
     def estimate_time(self, features):
         # probing fewer clusters is drastically faster at small k (Fig. 4)
@@ -127,9 +133,19 @@ class Generator(Component):
         self.max_new = max_new
 
     def generate(self, prompt_tokens, max_new: Optional[int] = None):
+        """``prompt_tokens``: flat tokens, or a ``SegmentedPrompt`` from the
+        Augmenter — the segmented form is what lets the engine's paged cache
+        reuse per-document KV blocks across requests."""
+        from repro.serving.segments import SegmentedPrompt
+
         self._record()
         if self.engine is not None:
-            req = self.engine.submit(np.asarray(prompt_tokens), max_new or self.max_new)
+            prompt = (
+                prompt_tokens
+                if isinstance(prompt_tokens, SegmentedPrompt)
+                else np.asarray(prompt_tokens)
+            )
+            req = self.engine.submit(prompt, max_new or self.max_new)
             self.engine.run_until_done()
             return req.out_tokens
         return [0] * (max_new or self.max_new)
@@ -154,23 +170,37 @@ class Generator(Component):
         self.engine.run_until_done()
         return req.out_tokens
 
-    def estimate_time(self, features):
+    def effective_hit_rate(self) -> float:
+        """The prefix hit rate the cost model should bill: the *measured*
+        rolling rate from a live engine's telemetry when one is attached
+        (and has served traffic), else the statically configured/calibrated
+        ``prefix_hit_rate``."""
+        eng = self.engine
+        if eng is not None and getattr(eng, "finished", None):
+            measure = getattr(eng, "measured_hit_rate", None)
+            if measure is not None:
+                return float(measure())
+        return self.prefix_hit_rate
+
+    def estimate_time(self, features, hit_rate: Optional[float] = None):
+        h = self.effective_hit_rate() if hit_rate is None else hit_rate
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
         tout = features.get("tokens_out", self.max_new)
-        prefill = tin * (1.0 - self.prefix_hit_rate) * self.prefill_per_token_s
+        prefill = tin * (1.0 - h) * self.prefill_per_token_s
         avg_ctx = tin + 0.5 * tout  # mean context length over the decode
         decode = tout * (
             self.decode_per_token_s + avg_ctx * self.decode_cache_per_ctx_token_s
         )
         return self.base_time_s + prefill + decode
 
-    def estimate_ttft(self, features):
+    def estimate_ttft(self, features, hit_rate: Optional[float] = None):
         """Time-to-first-token under chunked interleaved prefill: the
         non-shared prompt tokens stream through token-budget chunks, so TTFT
         scales with computed prompt tokens at the interleaved (per-step) rate
         rather than the saturated prefill throughput."""
+        h = self.effective_hit_rate() if hit_rate is None else hit_rate
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
-        return self.base_time_s + tin * (1.0 - self.prefix_hit_rate) * (
+        return self.base_time_s + tin * (1.0 - h) * (
             self.ttft_per_prefill_token_s
         )
 
@@ -198,11 +228,13 @@ class Grader(Generator):
         rnd = random.random()
         return rnd < threshold
 
-    def estimate_time(self, features):
+    def estimate_time(self, features, hit_rate: Optional[float] = None):
         # reads the full retrieved context; ~1.8x the generator's runtime in
-        # C-RAG per the paper's Fig. 10 measurement
+        # C-RAG per the paper's Fig. 10 measurement. Shared document blocks
+        # discount this prefill-dominated stage like any Generator.
+        h = self.effective_hit_rate() if hit_rate is None else hit_rate
         tin = features.get("docs_tokens", 10000) + features.get("tokens_in", 0)
-        return self.base_time_s + tin * self.prefill_per_token_s * 3 + self.decode_per_token_s
+        return self.base_time_s + tin * (1.0 - h) * self.prefill_per_token_s * 3 + self.decode_per_token_s
 
 
 class Rewriter(Generator):
@@ -212,7 +244,7 @@ class Rewriter(Generator):
         self._record()
         return query
 
-    def estimate_time(self, features):
+    def estimate_time(self, features, hit_rate: Optional[float] = None):
         return self.base_time_s + features.get("tokens_in", 64) * self.prefill_per_token_s + 24 * self.decode_per_token_s
 
 
@@ -223,7 +255,7 @@ class Critic(Generator):
         self._record()
         return random.random()
 
-    def estimate_time(self, features):
+    def estimate_time(self, features, hit_rate: Optional[float] = None):
         tin = features.get("tokens_out", 64) + features.get("docs_tokens", 0) * 0.2
         return self.base_time_s + tin * self.prefill_per_token_s * 3 + self.decode_per_token_s
 
@@ -237,8 +269,15 @@ class Reranker(Component):
     per_pair_s = 0.00025
 
     def rerank(self, query, docs, top_n: int = 20):
+        """Keeps doc identity: the reranked result carries ids + scores so
+        downstream prompt assembly (and the paged cache's document-keyed
+        blocks) survive the reordering this stage introduces."""
+        from repro.serving.retrieval import ScoredDocs
+
         self._record()
-        return list(docs)[:top_n]
+        ids = list(docs)[:top_n]
+        scores = getattr(docs, "scores", None)
+        return ScoredDocs(ids, scores[: len(ids)] if scores else None)
 
     def estimate_time(self, features):
         return self.base_time_s + features.get("k_docs", 100) * self.per_pair_s
@@ -292,6 +331,21 @@ class Augmenter(Component):
     def augment(self, query, docs):
         self._record()
         return {"query": query, "docs": docs}
+
+    def build_prompt(self, query_tokens, docs, store, system_tokens=None):
+        """Assemble the Generator's ``SegmentedPrompt`` from retrieval output:
+        ``docs`` is the (possibly reranked) id list, ``store`` resolves ids to
+        token arrays. Each document rides in its own segment carrying its
+        retrieval-assigned doc_id, so the paged cache can share its KV blocks
+        across requests regardless of the order this request put it at."""
+        from repro.serving.segments import assemble_prompt
+
+        self._record()
+        ids = list(docs)
+        return assemble_prompt(
+            query_tokens, store.tokens_for(ids), doc_ids=ids,
+            system_tokens=system_tokens,
+        )
 
 
 class WebSearch(Component):

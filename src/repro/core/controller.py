@@ -404,6 +404,9 @@ class PatchworkRuntime:
 
     # ------------------------------------------------------------ autoscaler
     def _reallocate(self):
+        from repro.core.components import Generator
+        from repro.core.profiling import generator_alpha_scale
+
         g = self._graph()
         # closed loop: re-estimate alpha from observed service, p from traces
         for comp, obs in self._service_obs.items():
@@ -412,10 +415,33 @@ class PatchworkRuntime:
                 dom = meta.dominant_resource()
                 per_inst = meta.resources.get(dom, 1.0)
                 meta.alpha = {dom: (1.0 / float(np.mean(obs[-512:]))) / per_inst}
+                comp_obj = self.app.components.get(comp)
+                if isinstance(comp_obj, Generator):
+                    # the observed service times embed whatever hit rate the
+                    # cache was delivering while they were recorded
+                    meta.alpha_hit_rate = comp_obj.effective_hit_rate()
         if self._traces:
             g.update_from_traces(self._traces[-512:])
+        # retrieval-aware cache feedback: a Generator whose measured prefix
+        # hit rate moved since its alpha was fitted gets the capacity delta
+        # applied at solve time (export the rate online for observability)
+        alpha_scale: Dict[str, float] = {}
+        for comp, comp_obj in self.app.components.items():
+            if not isinstance(comp_obj, Generator) or comp not in g.nodes:
+                continue
+            h = comp_obj.effective_hit_rate()
+            self.telemetry.gauge(f"prefix_hit_rate/{comp}", self.clock.now, h)
+            baked = g.nodes[comp].alpha_hit_rate
+            scale = generator_alpha_scale(
+                comp_obj, hit_rate=h, baseline_hit_rate=baked or 0.0
+            )
+            if abs(scale - 1.0) > 1e-3:
+                alpha_scale[comp] = scale
         min_inst = {c: meta_of(comp).base_instances for c, comp in self.app.components.items()}
-        plan = solve_allocation(g, self.budgets, min_instances=min_inst)
+        plan = solve_allocation(
+            g, self.budgets, min_instances=min_inst,
+            alpha_scale=alpha_scale or None,
+        )
         if plan.status == "optimal":
             tgt = plan.instances
             # hysteresis: apply only if two consecutive solutions agree

@@ -39,12 +39,19 @@ def profile_components(
     for name, comp in components.items():
         meta = meta_of(comp)
         times = []
+        cold = hasattr(comp, "effective_hit_rate")  # Generators: fit at h=0
+        ran_real = real_execution and hasattr(comp, "_profile_run")
         for _ in range(n_samples):
             feats = sample_request_features(rng)
-            if real_execution and hasattr(comp, "_profile_run"):
+            if ran_real:
                 t0 = time.perf_counter()
                 comp._profile_run(feats)
                 times.append(time.perf_counter() - t0)
+            elif cold:
+                # cold-cache baseline: the LP discounts Generator alpha by the
+                # *measured* hit rate at solve time (solve_allocation
+                # alpha_scale), so the fit must not bake a hit rate in twice
+                times.append(comp.estimate_time(feats, hit_rate=0.0))
             else:
                 times.append(comp.estimate_time(feats))
         mean_t = float(np.mean(times))
@@ -53,6 +60,16 @@ def profile_components(
         # one instance (= per_inst units of dom) sustains 1/mean_t req/s
         meta.alpha = {dom: (1.0 / mean_t) / per_inst}
         meta.mean_service_s = mean_t
+        # record the hit rate baked into this alpha so the controller's
+        # alpha_scale feedback never double-applies the cache discount:
+        # real-execution timings embed the engine's live rate; the estimate
+        # branch was explicitly evaluated cold
+        if not cold:
+            meta.alpha_hit_rate = None
+        elif ran_real:
+            meta.alpha_hit_rate = float(comp.effective_hit_rate())
+        else:
+            meta.alpha_hit_rate = 0.0
 
 
 def calibrate_generator_from_engine(
@@ -112,9 +129,15 @@ def calibrate_generator_from_engine(
     decode_long = max(t_long - eff(long_ctx) * prefill_per_token, 1e-9) / decode_tokens
     ctx_coeff = max(decode_long - decode_short, 0.0) / max(long_ctx - 8, 1)
 
-    stats = engine.stats()
-    seen = stats.get("prefix_hit_tokens", 0) + stats.get("prefill_tokens", 0)
-    hit_rate = stats.get("prefix_hit_tokens", 0) / seen if seen else 0.0
+    # rolling measured rate from engine telemetry (per-request hit rates over
+    # the finished window), not a static configured value; counter-ratio kept
+    # as the fallback for engines without the telemetry
+    if hasattr(engine, "measured_hit_rate"):
+        hit_rate = float(engine.measured_hit_rate())
+    else:
+        stats = engine.stats()
+        seen = stats.get("prefix_hit_tokens", 0) + stats.get("prefill_tokens", 0)
+        hit_rate = stats.get("prefix_hit_tokens", 0) / seen if seen else 0.0
 
     coeffs = {
         "prefill_per_token_s": prefill_per_token,
@@ -125,6 +148,28 @@ def calibrate_generator_from_engine(
     }
     gen.calibrate(coeffs)
     return coeffs
+
+
+def generator_alpha_scale(
+    gen,
+    features: Optional[Dict[str, float]] = None,
+    hit_rate: Optional[float] = None,
+    baseline_hit_rate: float = 0.0,
+) -> float:
+    """Capacity multiplier the observed prefix hit rate buys a Generator:
+    alpha was fitted at ``baseline_hit_rate`` (0 = cold cache), so one
+    resource unit now sustains ``t(baseline)/t(observed)`` times the fitted
+    request rate. Fed to ``solve_allocation(alpha_scale=...)`` so the LP
+    re-plans Generator capacity as cache effectiveness shifts."""
+    feats = features or {
+        "tokens_in": 128.0,
+        "docs_tokens": 2000.0,
+        "tokens_out": float(getattr(gen, "max_new", 64)),
+    }
+    h = gen.effective_hit_rate() if hit_rate is None else hit_rate
+    t_base = gen.estimate_time(feats, hit_rate=baseline_hit_rate)
+    t_now = gen.estimate_time(feats, hit_rate=h)
+    return max(t_base / max(t_now, 1e-12), 1e-6)
 
 
 def profile_routing(graph: WorkflowGraph, traces: List[List[str]]) -> None:

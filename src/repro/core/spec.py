@@ -33,6 +33,7 @@ class ComponentMeta:
     startup_cost_s: float = 2.0          # cold-start penalty on scale-up
     # profiling results (filled by core.profiling)
     alpha: Dict[str, float] = field(default_factory=dict)   # req/s per resource unit
+    alpha_hit_rate: Optional[float] = None  # prefix hit rate baked into alpha
     gamma: float = 1.0                                       # request amplification
     streaming: bool = False
 

@@ -72,6 +72,12 @@ class Telemetry:
             for c in set(q) | set(s)
         }
 
+    def last(self, name: str, default: float = 0.0) -> float:
+        """Latest value of a gauge (e.g. ``prefix_hit_rate/<comp>`` exported
+        online by the controller's reallocation loop)."""
+        series = self.gauges.get(name, [])
+        return series[-1][1] if series else default
+
     def gauge_stats(self, name: str) -> Dict[str, float]:
         series = self.gauges.get(name, [])
         if not series:

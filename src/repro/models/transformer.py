@@ -334,14 +334,24 @@ def apply_layer_decode(cfg, kind, lp, x, cache, pos, enc_out_unused=None):
 # ---------------------------------------------------------------------------
 
 
-def apply_layer_prefix(cfg, kind, lp, x, cache, pos):
-    """Chunked prefill: x (B,C,D) of prompt tokens at absolute positions
+def apply_layer_prefix(cfg, kind, lp, x, cache, pos, positions=None,
+                       seg_prefix_end=None, seg_start=None):
+    """Chunked prefill: x (B,C,D) of prompt tokens at cache slots
     ``pos .. pos+C-1`` attends the cached prefix plus itself (causal). The
     chunk's K/V entries are written into the cache before attention, so the
     returned cache is ready for the next chunk or for decode. ``pos`` is a
     scalar (all rows aligned) or (B,) per-row starts — the fused interleaved
     batch runs every row at its own cursor, decode rows included (C-padded
     chunks of one valid token).
+
+    Segmented prompts (retrieval-aware prefix caching) decouple a token's
+    RoPE position and attention span from its cache slot: ``positions``
+    (B,C) overrides the rope positions (document segments restart at the
+    prelude length so their K/V is order-independent), and the attention mask
+    becomes ``slot < seg_prefix_end[t]  OR  seg_start[t] <= slot <= slot(t)``
+    — document tokens attend the prelude plus their own segment only. The
+    defaults (positions == slots, seg bounds 0) reproduce plain causal
+    prefill bit-for-bit.
 
     Full-attention GQA stacks only (the paged serving path); other mixers keep
     the bucketed whole-prompt prefill."""
@@ -355,11 +365,13 @@ def apply_layer_prefix(cfg, kind, lp, x, cache, pos):
         )
     xn = apply_norm(cfg, lp["norm1"], x)
     if jnp.ndim(pos) == 0:
-        positions = jnp.broadcast_to(
+        slots = jnp.broadcast_to(
             (pos + jnp.arange(C)).astype(jnp.int32)[None], (B, C)
         )
     else:
-        positions = (pos[:, None] + jnp.arange(C)[None, :]).astype(jnp.int32)
+        slots = (pos[:, None] + jnp.arange(C)[None, :]).astype(jnp.int32)
+    if positions is None:
+        positions = slots
     q, k, v = attn.qkv_project(lp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -374,7 +386,13 @@ def apply_layer_prefix(cfg, kind, lp, x, cache, pos):
         kc = _cache_update(cache["k"], k, pos)
         vc = _cache_update(cache["v"], v, pos)
         k_read, v_read = kc, vc
-    valid = jnp.arange(Sc)[None, None, :] <= positions[:, :, None]  # (B,C,Sc)
+    s = jnp.arange(Sc)[None, None, :]
+    if seg_prefix_end is None:
+        valid = s <= slots[:, :, None]  # (B,C,Sc) plain causal over slots
+    else:
+        valid = (s < seg_prefix_end[:, :, None]) | (
+            (s >= seg_start[:, :, None]) & (s <= slots[:, :, None])
+        )
     a_out = attn.chunk_decode_attention(q, k_read, v_read, valid)
     x = x + a_out.reshape(B, C, cfg.num_heads * cfg.head_dim) @ lp["attn"]["wo"]
     new_cache = dict(cache)
@@ -480,11 +498,14 @@ def _segment_size(G: int) -> int:
     return best
 
 
-def run_stack_prefix(cfg, blocks, x, caches, pos):
+def run_stack_prefix(cfg, blocks, x, caches, pos, positions=None,
+                     seg_prefix_end=None, seg_start=None):
     """Scan the layer stack in chunked-prefill mode: x (B,C,D) written into
-    (and attending) the serve cache at absolute start position ``pos`` —
-    scalar, or (B,) per-row starts for the fused interleaved batch (the chunk
-    must fit inside the cache, no ring wrap)."""
+    (and attending) the serve cache at absolute start slot ``pos`` — scalar,
+    or (B,) per-row starts for the fused interleaved batch (the chunk must
+    fit inside the cache, no ring wrap). ``positions``/``seg_prefix_end``/
+    ``seg_start`` (all (B,C), optional) carry the segmented-prompt rope
+    positions and attention spans; see ``apply_layer_prefix``."""
     p = period(cfg)
     kinds = [layer_kind(cfg, i) for i in range(p)]
 
@@ -492,7 +513,10 @@ def run_stack_prefix(cfg, blocks, x, caches, pos):
         block_slice, cache_slice = slices
         new_caches = []
         for i in range(p):
-            x, nc = apply_layer_prefix(cfg, kinds[i], block_slice[i], x, cache_slice[i], pos)
+            x, nc = apply_layer_prefix(
+                cfg, kinds[i], block_slice[i], x, cache_slice[i], pos,
+                positions, seg_prefix_end, seg_start,
+            )
             new_caches.append(nc)
         return x, tuple(new_caches)
 

@@ -66,6 +66,7 @@ from repro.serving.paged_cache import (
     write_paged_chunk_batch,
 )
 from repro.serving.sampler import sample_tokens
+from repro.serving.segments import SegmentedPrompt, build_layout
 
 _NULL_SEQ = -1  # owner of the reserved scratch block
 
@@ -80,11 +81,14 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     slot: int = -1
     pos: int = 0
-    prefill_pos: int = 0             # prompt tokens already written to the cache
+    prefill_pos: int = 0             # cache slots already populated (computed/shared)
     prefill_cap: int = 0             # effective prompt length (post-truncation)
     done: bool = False
     truncated: bool = False          # prompt exceeded engine capacity
     shared_prefix_tokens: int = 0    # prompt tokens served from shared blocks
+    segprompt: Optional[SegmentedPrompt] = None  # retrieval-aware structure
+    layout: Any = None               # SegmentLayout (built at admission)
+    shared_spans: List = field(default_factory=list)  # token ranges served from cache
     queued_steps: int = 0            # engine steps spent waiting for admission
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
@@ -96,6 +100,12 @@ class Request:
     @property
     def prefilling(self) -> bool:
         return self.slot >= 0 and self.prefill_pos < self.prefill_cap
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of this request's (truncated) prompt served from shared
+        cache blocks — the per-request quantity the LP allocator consumes."""
+        return self.shared_prefix_tokens / self.prefill_cap if self.prefill_cap else 0.0
 
 
 def _bucket(n: int) -> int:
@@ -178,10 +188,18 @@ class GenerationEngine:
     # ------------------------------------------------------------------ API
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
                priority: float = 0.0) -> Request:
+        """``prompt`` is a flat token array, or a ``SegmentedPrompt`` whose
+        per-document segments enable order-independent KV reuse (paged
+        backend; the dense oracle flattens it)."""
+        segprompt = prompt if isinstance(prompt, SegmentedPrompt) else None
+        if segprompt is not None:
+            prompt = segprompt.tokens
         prompt = np.atleast_1d(np.asarray(prompt, np.int32))
         if prompt.size == 0:
             prompt = np.zeros(1, np.int32)  # empty prompt: decode from pad token
+            segprompt = None
         req = Request(self._next_id, prompt, max_new, temperature, priority)
+        req.segprompt = segprompt
         req.submitted_at = time.monotonic()
         self._next_id += 1
         self.waiting.append(req)
@@ -205,7 +223,18 @@ class GenerationEngine:
             s["utilization"] = self.kv.utilization()
             s["prefix_hit_tokens"] = self.kv.shared_token_hits
             s["free_blocks"] = self.kv.pool.n_free
+            s["measured_hit_rate"] = self.measured_hit_rate()
         return s
+
+    def measured_hit_rate(self, window: int = 256) -> float:
+        """Rolling token-weighted prefix hit rate over recently finished
+        requests — the online signal the Generator cost model and the LP
+        allocator consume (instead of a static configured rate)."""
+        done = [r for r in self.finished[-window:] if r.prefill_cap > 0]
+        total = sum(r.prefill_cap for r in done)
+        if not total:
+            return 0.0
+        return sum(r.shared_prefix_tokens for r in done) / total
 
     def latency_summary(self) -> Dict[str, float]:
         """TTFT/TPOT/e2e percentiles (seconds) over finished requests — the
@@ -227,6 +256,16 @@ class GenerationEngine:
             if xs:
                 out[f"{name}_p50"] = float(np.percentile(xs, 50))
                 out[f"{name}_p95"] = float(np.percentile(xs, 95))
+        capped = [r for r in done if r.prefill_cap > 0]
+        if capped:
+            # token-weighted measured hit rate + per-request distribution
+            out["prefix_hit_rate"] = float(
+                sum(r.shared_prefix_tokens for r in capped)
+                / sum(r.prefill_cap for r in capped)
+            )
+            out["prefix_hit_rate_p50"] = float(
+                np.percentile([r.prefix_hit_rate for r in capped], 50)
+            )
         return out
 
     # ------------------------------------------------------------ admission
@@ -248,25 +287,59 @@ class GenerationEngine:
             req.finished_at = time.monotonic()
             self.finished.append(req)
             return False
-        n_shared = self.kv.admit_tokens(req.req_id, req.prompt[:cap])
-        if n_shared is None:
+        layout = build_layout(
+            req.segprompt if req.segprompt is not None else req.prompt,
+            self.block_size, cap,
+        )
+        adm = self.kv.admit_tokens(req.req_id, req.prompt[:cap], layout)
+        if adm is None:
             return False  # backpressure: stays queued until blocks free up
-        req.shared_prefix_tokens = n_shared
+        req.layout = layout
+        req.shared_spans = adm.shared_spans
+        req.shared_prefix_tokens = adm.n_shared
         return True
+
+    def _advance_cursor(self, req: Request):
+        """Skip the prefill cursor over cache-served spans: shared blocks
+        already hold the K/V, so the cursor jumps to the next slot needing
+        compute (fully-cached documents cost zero prefill steps)."""
+        moved = True
+        while moved:
+            moved = False
+            for s, e in req.shared_spans:
+                if s <= req.prefill_pos < e:
+                    req.prefill_pos = e
+                    moved = True
+        req.prefill_pos = min(req.prefill_pos, req.prefill_cap)
+
+    def _max_grant(self, req: Request, limit: int) -> int:
+        """Largest prefill chunk startable at the cursor: clipped by the
+        chunk size, the prompt end, and the next shared span (shared blocks
+        are immutable — a chunk must never write into them)."""
+        c = min(limit, req.prefill_cap - req.prefill_pos)
+        for s, _e in req.shared_spans:
+            if s > req.prefill_pos:
+                c = min(c, s - req.prefill_pos)
+        return max(c, 0)
 
     # ------------------------------------------------------------ internals
     def _decode_fn(self, params, cache, tokens, pos):
         return decode_step(self.cfg, params, cache, tokens, pos)
 
     # ---------------------------------------------------------- paged path
-    def _prefill_chunk_fn(self, params, k_pool, v_pool, table_row, tokens, start, n_valid):
+    def _prefill_chunk_fn(self, params, k_pool, v_pool, table_row, tokens, start,
+                          n_valid, positions, p_end, s_start):
         """One chunked-prefill step for a single request (B=1): gather the
         sequence view, run the chunk through the stack, scatter its K/V back
-        into the pool (padding rerouted to the scratch block)."""
+        into the pool (padding rerouted to the scratch block).
+        ``positions``/``p_end``/``s_start`` (1, C) carry the segmented-prompt
+        rope positions and attention spans (see serving.segments)."""
         kview = gather_paged_batch(k_pool, table_row[None])  # (G,1,Sv,KVH,hd)
         vview = gather_paged_batch(v_pool, table_row[None])
         caches = ({"k": kview, "v": vview},)
-        logits, new_caches = prefill_chunk(self.cfg, params, caches, tokens, start)
+        logits, new_caches = prefill_chunk(
+            self.cfg, params, caches, tokens, start, positions, p_end, s_start
+        )
         pc = tokens.shape[1]
         newk = jax.lax.dynamic_slice_in_dim(new_caches[0]["k"], start, pc, axis=2)[:, 0]
         newv = jax.lax.dynamic_slice_in_dim(new_caches[0]["v"], start, pc, axis=2)[:, 0]
@@ -278,17 +351,22 @@ class GenerationEngine:
         )
         return logits[0, n_valid - 1], k_pool, v_pool
 
-    def _fused_step_fn(self, params, k_pool, v_pool, tables, tokens, starts, n_valid):
+    def _fused_step_fn(self, params, k_pool, v_pool, tables, tokens, starts,
+                       n_valid, positions, p_end, s_start):
         """One fused interleaved step: every row is a chunk at its own cursor —
-        decode rows carry one valid token at position ``starts[b]``, prefill
+        decode rows carry one valid token at slot ``starts[b]``, prefill
         rows carry ``n_valid[b]`` prompt tokens. Gather each row's sequence
         view, run one batched chunked forward, scatter all rows' new K/V back
         into the pool (padding rerouted to the scratch block), and return each
-        row's last-valid-token logits."""
+        row's last-valid-token logits. ``positions``/``p_end``/``s_start``
+        (B, C) carry per-row segmented-prompt rope positions and attention
+        spans (flat rows: positions == slots, spans zero)."""
         kview = gather_paged_batch(k_pool, tables)  # (G,B,Sv,KVH,hd)
         vview = gather_paged_batch(v_pool, tables)
         caches = ({"k": kview, "v": vview},)
-        logits, new_caches = prefill_chunk(self.cfg, params, caches, tokens, starts)
+        logits, new_caches = prefill_chunk(
+            self.cfg, params, caches, tokens, starts, positions, p_end, s_start
+        )
         B, C = tokens.shape
         b = jnp.arange(B)
         idx = starts[:, None] + jnp.arange(C)                 # (B, C) view slots
@@ -323,6 +401,20 @@ class GenerationEngine:
 
         return logits, scatter(k_pool, newk), scatter(v_pool, newv)
 
+    def _seg_arrays(self, req: Request, pos: int, c: int, width: int) -> tuple:
+        """(positions, p_end, s_start) (1, width) slices of the request's
+        layout at [pos, pos+c) — the segmented-prompt rope positions and
+        attention spans for one chunk (padding columns are masked out by
+        n_valid downstream; zeros are fine there)."""
+        positions = np.zeros((1, width), np.int32)
+        p_end = np.zeros((1, width), np.int32)
+        s_start = np.zeros((1, width), np.int32)
+        lay = req.layout
+        positions[0, :c] = lay.pos_ids[pos : pos + c]
+        p_end[0, :c] = lay.attn_p_end[pos : pos + c]
+        s_start[0, :c] = lay.attn_s_start[pos : pos + c]
+        return positions, p_end, s_start
+
     def _prefill_paged(self, req: Request, slot: int):
         cap = self._prompt_cap(req)
         req.truncated = cap < len(req.prompt)
@@ -331,23 +423,29 @@ class GenerationEngine:
         table = jnp.asarray(
             self.kv.pool.table_array([req.req_id], self._view_blocks)[0]
         )
-        pos = req.shared_prefix_tokens  # shared blocks carry the prefix K/V
+        req.prefill_cap = cap
+        req.prefill_pos = 0
+        self._advance_cursor(req)  # shared blocks already carry their K/V
         last = None
-        while pos < cap:
-            C = min(pc, cap - pos)
+        while req.prefill_pos < cap:
+            pos = req.prefill_pos
+            C = self._max_grant(req, pc)
             chunk = np.zeros((1, pc), np.int32)
             chunk[0, :C] = toks[pos : pos + C]
+            positions, p_end, s_start = self._seg_arrays(req, pos, C, pc)
             last, self.kv.k, self.kv.v = self._prefill_chunk_jit(
-                self.params, self.kv.k, self.kv.v, table, jnp.asarray(chunk), pos, C
+                self.params, self.kv.k, self.kv.v, table, jnp.asarray(chunk),
+                pos, C, jnp.asarray(positions), jnp.asarray(p_end),
+                jnp.asarray(s_start),
             )
-            pos += C
+            req.prefill_pos = pos + C
             self.prefill_tokens += C
+            self._advance_cursor(req)
         self.kv.lengths[req.req_id] = cap
-        self.kv.register_prefix(req.req_id, toks)
+        self.kv.register_prefix(req.req_id, toks, req.layout)
         req.slot = slot
         req.pos = cap
         req.prefill_pos = cap
-        req.prefill_cap = cap
         self._key, sk = jax.random.split(self._key)
         tok = int(sample_tokens(sk, jnp.asarray(last)[None], req.temperature)[0])
         self._emit(req, tok)
@@ -361,11 +459,15 @@ class GenerationEngine:
         if victim.slot >= 0 and self.slots[victim.slot] is victim:
             self.slots[victim.slot] = None
         victim.slot = -1
+        if victim.segprompt is not None:
+            victim.segprompt = victim.segprompt.extended(victim.out_tokens)
         victim.prompt = np.concatenate(
             [np.asarray(victim.prompt, np.int32),
              np.asarray(victim.out_tokens, np.int32)]
         )
         victim.shared_prefix_tokens = 0
+        victim.shared_spans = []
+        victim.layout = None
         victim.prefill_pos = 0
         victim.prefill_cap = 0
         self.waiting.insert(0, victim)
@@ -476,7 +578,7 @@ class GenerationEngine:
         for r in self.scheduler.order(prefill_rows):
             if budget <= 0:
                 break
-            c = min(self.prefill_chunk_size, r.prefill_cap - r.prefill_pos, budget)
+            c = min(self._max_grant(r, self.prefill_chunk_size), budget)
             grants[r.req_id] = c
             budget -= c
 
@@ -486,6 +588,9 @@ class GenerationEngine:
         starts = np.zeros((B,), np.int32)
         n_valid = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
+        positions = np.zeros((B, C), np.int32)
+        p_end = np.zeros((B, C), np.int32)
+        s_start = np.zeros((B, C), np.int32)
         tables = np.full((B, self._view_blocks), self._null_block, np.int32)
         rows = self.kv.pool.table_array([r.req_id for r in active], self._view_blocks)
         for i, r in enumerate(active):
@@ -497,14 +602,18 @@ class GenerationEngine:
                 tokens[r.slot, :c] = r.prompt[r.prefill_pos : r.prefill_pos + c]
                 starts[r.slot] = r.prefill_pos
                 n_valid[r.slot] = c
+                pp, pe, ss = self._seg_arrays(r, r.prefill_pos, c, C)
+                positions[r.slot], p_end[r.slot], s_start[r.slot] = pp[0], pe[0], ss[0]
             else:
                 tokens[r.slot, 0] = r.out_tokens[-1] if r.out_tokens else 0
                 starts[r.slot] = r.pos
                 n_valid[r.slot] = 1
+                positions[r.slot, 0] = r.pos  # decoded tokens: position == slot
 
         logits, self.kv.k, self.kv.v = self._fused_step_jit(
             self.params, self.kv.k, self.kv.v, jnp.asarray(tables),
             jnp.asarray(tokens), jnp.asarray(starts), jnp.asarray(n_valid),
+            jnp.asarray(positions), jnp.asarray(p_end), jnp.asarray(s_start),
         )
         self.steps += 1
         self._key, sk = jax.random.split(self._key)
@@ -523,11 +632,13 @@ class GenerationEngine:
                 continue  # no budget this step; cursor holds
             r.prefill_pos += c
             self.prefill_tokens += c
+            self._advance_cursor(r)  # skip cache-served spans for free
             self.kv.lengths[r.req_id] = r.prefill_pos
             if r.prefill_pos >= r.prefill_cap:
                 # prefill complete: publish prompt blocks, sample first token
                 self.kv.register_prefix(
-                    r.req_id, np.asarray(r.prompt[: r.prefill_cap], np.int32)
+                    r.req_id, np.asarray(r.prompt[: r.prefill_cap], np.int32),
+                    r.layout,
                 )
                 r.pos = r.prefill_cap
                 tok = int(toks[r.slot])
@@ -555,19 +666,29 @@ class GenerationEngine:
             cap = self._prompt_cap(req)
             req.truncated = cap < len(req.prompt)
             req.prefill_cap = cap
-            req.prefill_pos = req.shared_prefix_tokens  # shared blocks carry K/V
+            req.prefill_pos = 0
+            self._advance_cursor(req)  # shared blocks already carry their K/V
             req.slot = slot
             self.slots[slot] = req
 
     def _prefix_pending(self, req: Request) -> bool:
-        """True while an active request is still mid-prefill on a prompt that
-        shares this request's first cache block. Deferring admission until the
-        leader publishes its prefix blocks lets a same-context RAG burst reuse
-        them instead of re-running the shared prefill (prefill spans steps
-        now, so admission can no longer rely on the leader having finished)."""
+        """True while an active request is still mid-prefill on content this
+        request could share: the same first cache block (flat prompts), or any
+        shareable document segment (segmented prompts — the leader's doc
+        blocks are order-independent, so a follower reuses them wherever its
+        reranker placed the doc). Deferring admission until the leader
+        publishes its blocks lets a same-context RAG burst reuse them instead
+        of re-running the shared prefill (prefill spans steps now, so
+        admission cannot rely on the leader having finished)."""
         if not self.kv.prefix_sharing:
             return False
         bs = self.block_size
+        docs = _shareable_doc_heads(req.segprompt, bs)
+        if docs:
+            for r in self.slots:
+                if (r is not None and r.prefilling
+                        and docs & _shareable_doc_heads(r.segprompt, bs)):
+                    return True
         if len(req.prompt) <= bs:
             return False
         head = np.asarray(req.prompt[:bs])
@@ -640,6 +761,20 @@ class GenerationEngine:
                 self.slots[req.slot] = None
             if self.backend == "paged":
                 self.kv.release(req.req_id)
+
+
+def _shareable_doc_heads(segprompt, block_size: int) -> set:
+    """Content fingerprints of a prompt's document segments big enough to
+    yield at least one shareable (full) block."""
+    if segprompt is None:
+        return set()
+    from repro.serving.segments import KIND_DOC
+
+    return {
+        seg.tokens.tobytes()
+        for seg in segprompt.segments
+        if seg.kind == KIND_DOC and len(seg.tokens) >= block_size
+    }
 
 
 def _merge_cache(batch_cache, one_cache, slot: int, max_seq: int):

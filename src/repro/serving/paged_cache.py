@@ -9,9 +9,22 @@ VMEM), so the adaptation is table-driven gathers rather than CUDA
 page-table pointer chasing.
 
 Blocks are reference counted so concurrent RAG requests that embed the same
-retrieved documents share prefix blocks instead of recomputing them: a
-block-aligned rolling hash of the prompt indexes fully-written immutable
-blocks, and admission walks the chain reusing every matching block.
+retrieved documents share prefix blocks instead of recomputing them. Two
+keying schemes feed one prefix index:
+
+* whole-prompt chained hashes (``prefix_block_keys``) — the conservative
+  fallback for flat, unsegmented prompts: a block matches only when the
+  entire prompt prefix up to it matches;
+* segment-scoped keys (``serving.segments.build_layout``) — SegmentedPrompt
+  requests key each document segment's full blocks by (prelude, doc content)
+  chains that restart at segment boundaries, so a document's KV blocks are
+  shared across requests and survive re-ranking/reordering. Blocks straddling
+  a segment boundary are never keyed (partial tails are never shared).
+
+Admission walks a request's block ordinals sharing every indexed block (holes
+between hits become prefill compute spans), and releases keep refcount-0
+blocks warm in an LRU eviction queue (prefix-index hits re-heat a block even
+when the hitting request backpressures).
 
 Pool layout per layer-kind group (matching models.model.init_cache):
     k/v: (G, n_blocks, block_size, KVH, hd)
@@ -43,7 +56,7 @@ class PagedPool:
     free_list: List[int] = field(default_factory=list)
     tables: Dict[int, List[int]] = field(default_factory=dict)  # seq -> blocks
     refcounts: Dict[int, int] = field(default_factory=dict)     # block -> refs
-    cached: List[int] = field(default_factory=list)             # warm, evictable
+    cached: List[int] = field(default_factory=list)             # warm, LRU order
     on_free: Optional[Callable[[int], None]] = None             # block truly freed
     keep_on_release: Optional[Callable[[int], bool]] = None     # warm-cache policy
 
@@ -64,10 +77,19 @@ class PagedPool:
     def _pop_block(self) -> int:
         if self.free_list:
             return self.free_list.pop()
-        b = self.cached.pop(0)  # evict oldest warm block
+        b = self.cached.pop(0)  # evict least-recently-used warm block
         if self.on_free is not None:
             self.on_free(b)
         return b
+
+    def touch(self, block_id: int):
+        """LRU heat signal: a prefix-index hit moves a warm block to the back
+        of the eviction queue even when the hitting request cannot be admitted
+        yet (backpressure) — a hot shared prefix must outlive cold one-off
+        blocks released after it."""
+        if self.refcounts.get(block_id, 0) == 0 and block_id in self.cached:
+            self.cached.remove(block_id)
+            self.cached.append(block_id)
 
     def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
         need = self.blocks_needed(n_tokens)
@@ -101,7 +123,10 @@ class PagedPool:
         return self.allocate(seq_id, new_len - have)[0]
 
     def free(self, seq_id: int):
-        for b in self.tables.pop(seq_id, []):
+        # release in reverse chain order: a chain's head blocks (most likely
+        # to be re-hit — every prefix match starts there) land at the back of
+        # the LRU queue, so tails are evicted before heads
+        for b in reversed(self.tables.pop(seq_id, [])):
             self.refcounts[b] = self.refcounts.get(b, 1) - 1
             if self.refcounts[b] <= 0:
                 del self.refcounts[b]
@@ -235,17 +260,29 @@ def prefix_block_keys(tokens, block_size: int) -> List[bytes]:
     return keys
 
 
+@dataclass
+class Admission:
+    """Result of admission-controlled allocation for a prompt."""
+
+    n_shared: int                       # prompt tokens served from shared blocks
+    shared_spans: List[Tuple[int, int]]  # token ranges prefill may skip
+
+
 class PagedKVCache:
     """End-to-end paged cache for one model: pools per layer-group position.
 
     Usage (mirrors the engine's flow):
         cache = PagedKVCache(cfg, n_blocks=256, block_size=16)
-        n_shared = cache.admit_tokens(seq_id, prompt_tokens)  # host: allocate
+        adm = cache.admit_tokens(seq_id, prompt_tokens)       # host: allocate
         cache.write_prefill(seq_id, k_entries)                # device: copy-in
         cache.register_prefix(seq_id, prompt_tokens)          # publish blocks
         kv, valid = cache.sequence_view(seq_id, length)
         cache.release(seq_id)
-    """
+
+    ``admit_tokens``/``register_prefix`` take an optional
+    ``serving.segments.SegmentLayout``: segmented prompts key per-document
+    blocks independently of document order, so hits can be non-contiguous
+    (``Admission.shared_spans`` lists every skippable token range)."""
 
     def __init__(self, cfg, n_blocks: int = 256, block_size: int = 16,
                  max_blocks_per_seq: int = 64, prefix_sharing: bool = True):
@@ -276,55 +313,81 @@ class PagedKVCache:
         if key is not None and self._prefix_index.get(key) == block_id:
             del self._prefix_index[key]
 
-    def _shareable_blocks(self, tokens) -> List[int]:
-        """Longest chain of already-cached full prompt blocks. Never includes
-        the block holding the final prompt token — at least one token must run
-        through the model to produce the first-sample logits."""
-        if not self.prefix_sharing:
-            return []
-        bs = self.block_size
-        limit = (len(tokens) - 1) // bs  # last-token block excluded
-        blocks: List[int] = []
-        for key in prefix_block_keys(np.asarray(tokens)[: limit * bs], bs):
+    def _block_hits(self, tokens, layout) -> Dict[int, int]:
+        """Block ordinal -> cached block id, for every keyed block already in
+        the prefix index. Never includes the block holding the final prompt
+        token — at least one token must run through the model to produce the
+        first-sample logits. Hits touch warm blocks (LRU heat) even when the
+        caller subsequently backpressures."""
+        if not self.prefix_sharing or not len(tokens):
+            return {}
+        last_block = (len(tokens) - 1) // self.block_size
+        hits: Dict[int, int] = {}
+        for ordinal, key in enumerate(layout.block_keys):
+            if key is None or ordinal == last_block:
+                continue
             b = self._prefix_index.get(key)
-            if b is None:
-                break
-            blocks.append(b)
-        return blocks
+            if b is not None:
+                hits[ordinal] = b
+                self.pool.touch(b)
+        return hits
 
-    def admit_tokens(self, seq_id: int, tokens) -> Optional[int]:
+    def admit_tokens(self, seq_id: int, tokens, layout=None) -> Optional[Admission]:
         """Admission-controlled allocation for a prompt. Reuses every cached
-        prefix block, allocates the tail (+1 slack block for decode), and
-        returns the number of prompt tokens already served by shared blocks —
-        or None when the pool cannot fit the request (backpressure)."""
-        Lp = len(tokens)
-        shared = self._shareable_blocks(tokens)
-        n_shared = len(shared) * self.block_size
-        need_tokens = Lp - n_shared + self.block_size
-        # reviving a warm cached block consumes n_free headroom too — count it,
-        # or the tail allocation below can raise instead of backpressuring
-        n_warm = sum(1 for b in shared if self.pool.refcounts.get(b, 0) == 0)
-        if self.pool.blocks_needed(need_tokens) + n_warm > self.pool.n_free:
-            return None
-        for b in shared:
-            self.pool.share(seq_id, b)
-        self.pool.allocate(seq_id, need_tokens)
-        self.lengths[seq_id] = n_shared
-        self.shared_token_hits += n_shared
-        return n_shared
+        keyed block (+1 slack block for decode), and returns the admission
+        record (shared token count + skippable spans) — or None when the pool
+        cannot fit the request (backpressure). Flat prompts fall back to the
+        whole-prompt chained hash (hits form one leading span); segmented
+        prompts can hit per-document blocks anywhere in the layout."""
+        from repro.serving.segments import build_layout
 
-    def register_prefix(self, seq_id: int, tokens):
+        Lp = len(tokens)
+        if layout is None:
+            layout = build_layout(np.asarray(tokens), self.block_size)
+        bs = self.block_size
+        n_blocks = self.pool.blocks_needed(Lp)
+        hits = self._block_hits(tokens, layout)
+        # new blocks (misses + 1 decode slack) plus warm revivals both consume
+        # n_free headroom — count them, or allocation below can raise instead
+        # of backpressuring
+        n_new = n_blocks - len(hits) + 1
+        n_warm = sum(1 for b in hits.values() if self.pool.refcounts.get(b, 0) == 0)
+        if n_new + n_warm > self.pool.n_free:
+            return None
+        for ordinal in range(n_blocks):
+            if ordinal in hits:
+                self.pool.share(seq_id, hits[ordinal])
+            else:
+                self.pool.allocate(seq_id, 1)
+        self.pool.allocate(seq_id, 1)  # decode slack block
+        n_shared = len(hits) * bs
+        self.lengths[seq_id] = 0
+        self.shared_token_hits += n_shared
+        spans: List[Tuple[int, int]] = []
+        for ordinal in sorted(hits):
+            lo, hi = ordinal * bs, (ordinal + 1) * bs
+            if spans and spans[-1][1] == lo:
+                spans[-1] = (spans[-1][0], hi)
+            else:
+                spans.append((lo, hi))
+        return Admission(n_shared, spans)
+
+    def register_prefix(self, seq_id: int, tokens, layout=None):
         """Publish this sequence's fully written prompt blocks into the prefix
-        index so later requests with the same retrieved-context prefix reuse
-        them. Only immutable blocks qualify: block i is registered iff the
-        prompt covers it entirely ((i+1)*bs <= len(tokens)); decode writes land
-        strictly after the prompt, so published blocks are never mutated."""
+        index so later requests reuse them. Only immutable blocks qualify:
+        keyed blocks are full blocks inside one segment ((i+1)*bs <=
+        len(tokens) always holds for them); decode writes land strictly after
+        the prompt, so published blocks are never mutated."""
         if not self.prefix_sharing:
             return
+        from repro.serving.segments import build_layout
+
+        if layout is None:
+            layout = build_layout(np.asarray(tokens), self.block_size)
         table = self.pool.tables.get(seq_id, [])
-        for i, key in enumerate(prefix_block_keys(tokens, self.block_size)):
-            if i >= len(table):
-                break
+        for i, key in enumerate(layout.block_keys):
+            if key is None or i >= len(table):
+                continue
             if key not in self._prefix_index:
                 self._prefix_index[key] = table[i]
                 self._block_key[table[i]] = key

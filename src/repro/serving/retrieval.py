@@ -19,6 +19,41 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class ScoredDocs(list):
+    """Retrieval result: a list of doc ids (drop-in for the plain id lists
+    components used to exchange) carrying parallel relevance ``scores``. The
+    ids are the currency of retrieval-aware prefix caching — they key the
+    Generator's per-document KV blocks (serving.segments)."""
+
+    def __init__(self, ids, scores=None):
+        super().__init__(int(i) for i in ids)
+        self.scores = (
+            [float(s) for s in scores] if scores is not None else [0.0] * len(self)
+        )
+
+    def top(self, n: int) -> "ScoredDocs":
+        return ScoredDocs(list(self)[:n], self.scores[:n])
+
+
+@dataclass
+class DocTokenStore:
+    """Deterministic doc_id -> token-array corpus (tokenizer-free substrate,
+    matching ``_embed_query``): the prompt assembler resolves retrieval ids
+    to document segments through this. ``doc_len`` a multiple of the paged
+    cache's block size maximizes KV block reuse (partial tail blocks are
+    never shared)."""
+
+    vocab: int = 512
+    doc_len: int = 64
+
+    def tokens(self, doc_id: int) -> np.ndarray:
+        rng = np.random.default_rng((int(doc_id) * 2654435761 + 97) % (2**31))
+        return rng.integers(0, self.vocab, self.doc_len).astype(np.int32)
+
+    def tokens_for(self, doc_ids) -> list:
+        return [self.tokens(d) for d in doc_ids]
+
+
 def kmeans(key, data: jnp.ndarray, n_clusters: int, iters: int = 8):
     """Lightweight k-means (enough to make probing meaningful)."""
     n = data.shape[0]

@@ -168,5 +168,12 @@ def test_generator_ttft_term_calibrates_from_interleaved_engine():
     short = gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 0})
     long = gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 5000})
     assert long > short
-    gen.calibrate({"prefix_hit_rate": 0.9})
-    assert gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 5000}) < long
+    # with a live engine attached the *measured* rolling hit rate drives the
+    # estimate (the calibration runs used distinct prompts, so it is ~0); an
+    # explicit hit_rate override and a detached Generator with a calibrated
+    # static rate must both discount TTFT
+    assert gen.estimate_ttft({"tokens_in": 100, "docs_tokens": 5000},
+                             hit_rate=0.9) < long
+    detached = Generator()
+    detached.calibrate({**coeffs, "prefix_hit_rate": 0.9})
+    assert detached.estimate_ttft({"tokens_in": 100, "docs_tokens": 5000}) < long
