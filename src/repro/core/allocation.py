@@ -36,6 +36,16 @@ class AllocationPlan:
     status: str
 
 
+def _default_tp_efficiency(t: int, comm_fraction: float = 0.08) -> float:
+    """Per-chip efficiency s(t)/t of a tp-sharded Generator replica under the
+    saturating speedup s(t) = t / (1 + f*(t-1)) (components.Generator
+    .tp_speedup): compute splits t ways, the per-layer all-reduce pair does
+    not. Equals 1 at t=1 and decays toward f as t grows."""
+    if t <= 1:
+        return 1.0
+    return 1.0 / (1.0 + comm_fraction * (t - 1))
+
+
 def solve_allocation(
     graph: WorkflowGraph,
     budgets: Dict[str, float],
@@ -43,6 +53,8 @@ def solve_allocation(
     source_rate: Optional[float] = None,
     alpha_scale: Optional[Dict[str, float]] = None,
     resource_penalty: float = 0.0,
+    tp_degree: Optional[Dict[str, int]] = None,
+    tp_efficiency=None,
 ) -> AllocationPlan:
     """Solve the Fig. 8 LP for the captured workflow graph.
 
@@ -58,8 +70,30 @@ def solve_allocation(
     ``source_rate`` cap the throughput optimum is degenerate in resources, so
     a nonzero penalty makes the solver return the *cheapest* optimal plan
     (visible replica savings) instead of an arbitrary vertex.
+    ``tp_degree``: component -> tensor-parallel degree of each replica (the
+    sharded-pool engine spans ``t`` chips per replica). The LP stays linear:
+    the fitted per-chip alpha is multiplied by the per-chip efficiency
+    ``tp_efficiency`` — either a ``{component: efficiency}`` dict (the
+    controller passes each Generator's calibrated ``tp_speedup(t) / t``) or a
+    callable ``t -> efficiency`` (default: the saturating Megatron-collective
+    model ``1 / (1 + 0.08*(t-1))``, matching ``Generator.tp_speedup`` at its
+    default ``tp_comm_fraction``) — and instance counting treats ``t``
+    dominant-resource bundles as ONE replica, so the plan reports sharded
+    replica counts and tp degrees that buy latency at sub-linear throughput
+    cost show up as extra provisioned chips.
     """
     t0 = time.perf_counter()
+    tp_degree = tp_degree or {}
+    if isinstance(tp_efficiency, dict):
+        eff_map = tp_efficiency
+
+        def tp_eff(comp, t):
+            return eff_map.get(comp, _default_tp_efficiency(t))
+    else:
+        eff_fn = tp_efficiency or _default_tp_efficiency
+
+        def tp_eff(comp, t):
+            return eff_fn(t)
     comps = graph.component_names()
     res_types = sorted(budgets)
     n, k = len(comps), len(res_types)
@@ -111,6 +145,9 @@ def solve_allocation(
                 row[ei] = amp
         meta = graph.nodes[comp]
         scale = (alpha_scale or {}).get(comp, 1.0)
+        # tp-sharded replicas: per-chip capacity discounted by the collective
+        # overhead of spanning t chips (keeps the constraint linear in r)
+        scale *= tp_eff(comp, tp_degree.get(comp, 1))
         for j, rt in enumerate(res_types):
             alpha = meta.alpha.get(rt, 0.0) * scale
             row[rvar(ci, j)] = -alpha
@@ -168,7 +205,8 @@ def solve_allocation(
         dom = meta.dominant_resource()
         if dom in res_types:
             j = res_types.index(dom)
-            need = meta.resources.get(dom, 1.0) * base
+            # a minimum of `base` replicas reserves base*t bundles when sharded
+            need = meta.resources.get(dom, 1.0) * base * max(tp_degree.get(comp, 1), 1)
             bounds[rvar(comp_idx[comp], j)] = (need, None)
 
     result = linprog(
@@ -193,7 +231,8 @@ def solve_allocation(
         alloc = {rt: float(x[rvar(ci, j)]) for j, rt in enumerate(res_types)}
         resources[comp] = alloc
         dom = meta.dominant_resource()
-        per_inst = meta.resources.get(dom, 1.0)
+        # one tp-sharded replica spans t dominant-resource bundles
+        per_inst = meta.resources.get(dom, 1.0) * max(tp_degree.get(comp, 1), 1)
         raw = alloc.get(dom, 0.0) / max(per_inst, 1e-9)
         instances[comp] = max(int(math.floor(raw + 1e-6)), min_instances.get(comp, 0), 1)
     flows = {(s, d): float(x[ei]) for (s, d), ei in edge_idx.items()}

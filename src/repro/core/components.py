@@ -126,11 +126,32 @@ class Generator(Component):
     # so time-to-first-token has its own (steeper) per-token slope than the
     # saturated whole-prompt prefill throughput above
     ttft_per_prefill_token_s = 0.000013
+    # tensor parallelism: one replica spans tp_degree chips (sharded paged
+    # pools, serving.sharded_pool). Per-token compute and KV reads scale
+    # ~1/tp, but each layer pays the Megatron all-reduce pair regardless of
+    # tp, so the speedup saturates: s(t) = t / (1 + tp_comm_fraction*(t-1)).
+    # tp_comm_fraction is the collective share of a t=1 step (calibratable).
+    tp_degree = 1
+    tp_comm_fraction = 0.08
 
-    def __init__(self, engine=None, max_new: int = 64):
+    def __init__(self, engine=None, max_new: int = 64, tp_degree: int = 1):
         super().__init__()
         self.engine = engine
         self.max_new = max_new
+        if tp_degree != 1:
+            self.tp_degree = int(tp_degree)
+
+    def tp_speedup(self, t: Optional[int] = None) -> float:
+        """Per-replica latency speedup of tp-sharding the generation step:
+        compute parallelizes over t chips while the per-layer all-reduce term
+        does not, so s(t) = t / (1 + f*(t-1)) with f = tp_comm_fraction —
+        s(1) = 1, and s(t) -> 1/f as t grows. The LP uses s(t)/t as the
+        per-chip efficiency of a sharded replica (solve_allocation
+        tp_degree=...)."""
+        t = self.tp_degree if t is None else int(t)
+        if t <= 1:
+            return 1.0
+        return t / (1.0 + self.tp_comm_fraction * (t - 1))
 
     def generate(self, prompt_tokens, max_new: Optional[int] = None):
         """``prompt_tokens``: flat tokens, or a ``SegmentedPrompt`` from the
@@ -191,18 +212,22 @@ class Generator(Component):
         decode = tout * (
             self.decode_per_token_s + avg_ctx * self.decode_cache_per_ctx_token_s
         )
-        return self.base_time_s + prefill + decode
+        # TP shards the token work across tp_degree chips (comm-discounted);
+        # the flat engine overhead (scheduling, sampling, host sync) does not
+        # shrink with the mesh
+        return self.base_time_s + (prefill + decode) / self.tp_speedup()
 
     def estimate_ttft(self, features, hit_rate: Optional[float] = None):
         """Time-to-first-token under chunked interleaved prefill: the
         non-shared prompt tokens stream through token-budget chunks, so TTFT
         scales with computed prompt tokens at the interleaved (per-step) rate
-        rather than the saturated prefill throughput."""
+        rather than the saturated prefill throughput. TP divides the per-chunk
+        compute like every other token term."""
         h = self.effective_hit_rate() if hit_rate is None else hit_rate
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
         return self.base_time_s + tin * (1.0 - h) * (
             self.ttft_per_prefill_token_s
-        )
+        ) / self.tp_speedup()
 
     def output_features(self, features):
         f = dict(features)

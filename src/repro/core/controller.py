@@ -167,10 +167,29 @@ class PatchworkRuntime:
     def _graph(self) -> WorkflowGraph:
         return self.app.workflow_graph
 
+    def _generator_tp_terms(self):
+        """(tp_degree, tp_efficiency) dicts for the sharded Generators: the
+        LP must see the degree AND each component's calibrated per-chip
+        efficiency (tp_speedup(t)/t — tracks a fitted tp_comm_fraction, not
+        the library default) from the very first solve, or the initial plan
+        provisions t-chip replicas as 1-chip bundles."""
+        from repro.core.components import Generator
+
+        tp_degree: Dict[str, int] = {}
+        tp_eff: Dict[str, float] = {}
+        for comp, obj in self.app.components.items():
+            if isinstance(obj, Generator) and obj.tp_degree > 1:
+                tp_degree[comp] = obj.tp_degree
+                tp_eff[comp] = obj.tp_speedup() / obj.tp_degree
+        return tp_degree, tp_eff
+
     def _deploy_lp(self):
         g = self._graph()
         min_inst = {c: meta_of(comp).base_instances for c, comp in self.app.components.items()}
-        plan = solve_allocation(g, self.budgets, min_instances=min_inst)
+        tp_degree, tp_eff = self._generator_tp_terms()
+        plan = solve_allocation(g, self.budgets, min_instances=min_inst,
+                                tp_degree=tp_degree or None,
+                                tp_efficiency=tp_eff or None)
         self.plan = plan
         counts = plan.instances if plan.status == "optimal" else {
             c: max(meta_of(comp).base_instances, 1)
@@ -437,10 +456,17 @@ class PatchworkRuntime:
             )
             if abs(scale - 1.0) > 1e-3:
                 alpha_scale[comp] = scale
+        # sharded Generators: the LP provisions t chips per replica at each
+        # component's calibrated per-chip efficiency (export for observability)
+        tp_degree, tp_eff = self._generator_tp_terms()
+        for comp, t in tp_degree.items():
+            self.telemetry.gauge(f"tp_degree/{comp}", self.clock.now, float(t))
         min_inst = {c: meta_of(comp).base_instances for c, comp in self.app.components.items()}
         plan = solve_allocation(
             g, self.budgets, min_instances=min_inst,
             alpha_scale=alpha_scale or None,
+            tp_degree=tp_degree or None,
+            tp_efficiency=tp_eff or None,
         )
         if plan.status == "optimal":
             tgt = plan.instances

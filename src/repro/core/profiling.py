@@ -172,6 +172,28 @@ def generator_alpha_scale(
     return max(t_base / max(t_now, 1e-12), 1e-6)
 
 
+def fit_tp_comm_fraction(tp_degree: int, measured_speedup: float) -> float:
+    """Invert the saturating TP model from one measured A/B point.
+
+    ``Generator.tp_speedup`` assumes s(t) = t / (1 + f*(t-1)); given the
+    measured per-replica speedup of a ``tp_degree``-sharded engine over the
+    tp=1 oracle on the same workload (e.g. the wall-time ratio of two
+    ``GenerationEngine.run_until_done`` runs), solve for the collective
+    fraction f:
+
+        f = (t / s - 1) / (t - 1)
+
+    Clamped to [0, 1]: a super-linear measurement (cache effects) fits f=0, a
+    slowdown fits f=1. Write the result to ``gen.tp_comm_fraction`` via
+    ``Generator.calibrate`` so estimate_time/estimate_ttft and the LP's
+    tp_degree discount track the measured mesh instead of the default."""
+    t = max(int(tp_degree), 1)
+    if t <= 1:
+        return 0.0
+    s = max(float(measured_speedup), 1e-9)
+    return float(min(max((t / s - 1.0) / (t - 1), 0.0), 1.0))
+
+
 def profile_routing(graph: WorkflowGraph, traces: List[List[str]]) -> None:
     """Update p_ij and recursion marks from execution traces."""
     graph.update_from_traces(traces)

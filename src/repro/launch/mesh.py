@@ -38,7 +38,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh_compat(shape, axes)
 
 
+def make_serving_mesh(tp: int = 1, dp: int = 1):
+    """Mesh for the sharded paged engine: ("model",) for pure TP, ("data",
+    "model") when DP replicas are requested. Fails loudly when the host
+    doesn't expose tp*dp devices (force them on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    n = len(jax.devices())
+    if tp * dp > n:
+        raise ValueError(
+            f"serving mesh tp={tp} dp={dp} needs {tp * dp} devices, have {n}"
+        )
+    if dp > 1:
+        return make_mesh_compat((dp, tp), ("data", "model"))
+    return make_mesh_compat((tp,), ("model",))
+
+
 def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """Axis name -> size for any mesh built here; round-trips through
+    ``make_mesh_compat`` (mesh_axis_sizes(make_mesh_compat(shape, axes)) ==
+    dict(zip(axes, shape)))."""
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 

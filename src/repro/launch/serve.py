@@ -33,15 +33,31 @@ def serve_sim(app_name: str, rate: float, duration: float, engine: str = "patchw
     return m
 
 
-def serve_real(arch: str, n_requests: int = 8, max_new: int = 12):
-    """Serve a real reduced model with batched requests on this host."""
+def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
+               tp: int = 1, dp: int = 1):
+    """Serve a real reduced model with batched requests on this host.
+
+    ``tp > 1`` shards the paged engine over a ("model",) mesh — TP-resident
+    weights, KV pools partitioned by KV head (serving.sharded_pool); ``dp >
+    1`` adds data-parallel replica engines with independent admission over
+    block ranges of one shared pool. On CPU, force enough fake devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
     import jax
 
     from repro.configs import get_arch, smoke_variant
-    from repro.serving.engine import GenerationEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.engine import DataParallelEngineGroup, GenerationEngine
+    from repro.serving.sharded_pool import ShardedPoolLayout
 
     cfg = smoke_variant(get_arch(arch))
-    eng = GenerationEngine(cfg, max_batch=4, max_seq=256)
+    layout = None
+    if tp > 1 or dp > 1:
+        layout = ShardedPoolLayout(make_serving_mesh(tp, dp), dp_blocks=dp > 1)
+    if dp > 1:
+        eng = DataParallelEngineGroup(cfg, dp=dp, max_batch=4, max_seq=256,
+                                      pool_layout=layout)
+    else:
+        eng = GenerationEngine(cfg, max_batch=4, max_seq=256, pool_layout=layout)
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(rng.integers(0, cfg.vocab_size, rng.integers(4, 32)), max_new)
@@ -51,7 +67,11 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12):
     for r in reqs:
         print(f"  req {r.req_id}: {len(r.out_tokens)} tokens "
               f"ttft={1e3*(r.first_token_at - r.submitted_at):.0f}ms")
-    print(f"[serve:real] {arch}: {eng.tokens_out} tokens in {eng.steps} engine steps")
+    stats = eng.stats()
+    print(f"[serve:real] {arch}: tp={tp} dp={dp} "
+          f"{stats['tokens_out']} tokens out")
+    if tp > 1 and dp == 1:
+        print(f"[serve:real] fused-step collectives: {eng.audit_collectives()}")
 
 
 def main(argv=None):
@@ -63,9 +83,15 @@ def main(argv=None):
     ap.add_argument("--slo", type=float, default=2.0)
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for the paged engine "
+                         "(shards KV pools by KV head over a 'model' mesh axis)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica engines with independent "
+                         "admission over block ranges of one shared pool")
     args = ap.parse_args(argv)
     if args.real:
-        serve_real(args.arch)
+        serve_real(args.arch, tp=args.tp, dp=args.dp)
     else:
         serve_sim(args.app, args.rate, args.duration, args.engine, args.slo)
 

@@ -235,6 +235,63 @@ def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, cache_abstract, axis_size
     return jax.tree_util.tree_map_with_path(spec_for, cache_abstract)
 
 
+def pool_pspecs(cfg: ModelConfig, axis_sizes: Dict[str, int],
+                dp_blocks: bool = False, n_blocks: int = None) -> P:
+    """PartitionSpec for a paged KV block pool (serving.paged_cache).
+
+    Pool layout is ``(G, n_blocks, block_size, KVH, hd)``. The TP partition is
+    over the **KV-head dim** (each model-axis shard holds ``KVH / tp`` heads
+    of EVERY block) — unlike the dense serve cache, the sequence dim has been
+    chopped into blocks whose ids live in host-side tables, so sharding the
+    block axis over "model" would turn every block-table gather into a
+    cross-shard shuffle. KV-head sharding keeps ``gather_paged_batch`` /
+    ``write_paged_chunk_batch`` and the chunk-scatter purely local per shard
+    (blocks/slots are fully replicated axes); attention consumes per-shard
+    head groups and only the post-attention output projection reduces.
+
+    ``dp_blocks=True`` additionally shards the block axis over "data": DP
+    replicas own disjoint block *ranges* of one pool array (independent
+    admission per replica, see serving.sharded_pool.ShardedPoolLayout).
+
+    As everywhere in this policy, a dim that does not divide its mesh axis
+    stays unsharded (explicit; no GSPMD padding)."""
+    model = axis_sizes.get("model", 1)
+    data = axis_sizes.get("data", 1)
+    kvh_axis = "model" if model > 1 and cfg.num_kv_heads % model == 0 else None
+    # pass n_blocks when known so the divisibility rule applies to the block
+    # dim too (callers that can't know it get the sharding they asked for)
+    blocks_div = n_blocks is None or n_blocks % data == 0
+    blocks_axis = "data" if dp_blocks and data > 1 and blocks_div else None
+    return P(None, blocks_axis, None, kvh_axis, None)
+
+
+def serve_engine_pspecs(cfg: ModelConfig, params_abstract, axis_sizes: Dict[str, int]):
+    """Parameter PartitionSpecs for the sharded paged engine: serve-mode TP
+    (no FSDP — weights are TP-resident, see ``param_pspecs(serve=True)``)
+    with the embedding table and lm_head forced replicated.
+
+    Keeping vocab-dim weights replicated is what makes the engine's step
+    programs collective-minimal: a model-sharded embedding would put an
+    all-reduce (or worse, a table all-gather) in front of EVERY fused step,
+    and a sharded lm_head would return model-sharded logits to the host
+    sampler. With them replicated, the only communication left in the compiled
+    step is the Megatron pair — one all-reduce after the attention output
+    projection and one after the MLP down projection per layer group — which
+    ``GenerationEngine.audit_collectives`` asserts."""
+    base = param_pspecs(cfg, params_abstract, axis_sizes, serve=True)
+
+    def override(path, spec, leaf):
+        pstr = _path_str(path)
+        if pstr.startswith(("embed", "lm_head")):
+            return P(*([None] * leaf.ndim))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        override, base, params_abstract,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
 # ---------------------------------------------------------------------------
 # activation sharding constraints (MaxText-style)
 # ---------------------------------------------------------------------------

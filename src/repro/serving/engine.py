@@ -61,12 +61,14 @@ from repro.models import (
 )
 from repro.serving.paged_cache import (
     PagedKVCache,
+    PoolArrays,
     gather_paged_batch,
     write_paged_chunk,
     write_paged_chunk_batch,
 )
 from repro.serving.sampler import sample_tokens
 from repro.serving.segments import SegmentedPrompt, build_layout
+from repro.serving.sharded_pool import ShardedPoolLayout, block_range
 
 _NULL_SEQ = -1  # owner of the reserved scratch block
 
@@ -133,7 +135,20 @@ class GenerationEngine:
         token_budget: Optional[int] = None,
         scheduler: Any = "fifo",
         max_finished: int = 10_000,
+        mesh: Any = None,
+        pool_layout: Optional[ShardedPoolLayout] = None,
+        kv: Optional[PagedKVCache] = None,
     ):
+        """``mesh`` / ``pool_layout`` shard the paged backend over a device
+        mesh: params become TP-resident (Megatron layout, embed/lm_head
+        replicated), the KV pool arrays shard over the model axis by KV head,
+        and the three step programs are pjit-compiled with pinned pool
+        shardings — every block-table gather and chunk scatter is local per
+        shard, so the only communication is the post-attention/MLP output
+        reductions (``audit_collectives`` asserts this). With neither given
+        the engine is bit-identical to the historical single-device path.
+        ``kv`` injects a pre-built PagedKVCache — the DataParallelEngineGroup
+        uses this to hand replicas block-range slices of one shared pool."""
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
@@ -171,16 +186,39 @@ class GenerationEngine:
             if n_blocks is None:
                 # full provisioning: every slot can reach max_seq (+ slack), +1 scratch
                 n_blocks = max_batch * (self.max_blocks + 1) + 1
-            self.kv = PagedKVCache(
-                cfg, n_blocks, block_size, self.max_blocks, prefix_sharing=prefix_sharing
+            if pool_layout is None and mesh is not None:
+                pool_layout = ShardedPoolLayout(mesh)
+            if kv is not None and kv.layout is not None:
+                pool_layout = kv.layout
+            self.pool_layout = pool_layout
+            if pool_layout is not None:
+                pool_layout.validate(cfg)
+                # TP-resident weights: resharding happens once at engine
+                # construction (deployment), never per step
+                self.params = pool_layout.place_params(cfg, self.params)
+            self.kv = kv if kv is not None else PagedKVCache(
+                cfg, n_blocks, block_size, self.max_blocks,
+                prefix_sharing=prefix_sharing, layout=pool_layout,
             )
             # reserved scratch block: swallows masked padding/inactive-slot
             # writes and backs clamped gathers of unallocated table entries
             self._null_block = self.kv.pool.allocate(_NULL_SEQ, 1)[0]
-            self._decode_paged_jit = jax.jit(self._decode_paged_fn)
-            self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn)
-            self._fused_step_jit = jax.jit(self._fused_step_fn)
+            if pool_layout is not None:
+                # pin the pool arrays' sharding across steps: without
+                # out_shardings the partitioner could legally re-place the
+                # carried pools each call, silently re-sharding per step
+                rep = pool_layout.replicated()
+                pool_s = pool_layout.pool_sharding(cfg, self.kv.pool.n_blocks)
+                out_s = (rep, pool_s, pool_s)
+                self._decode_paged_jit = jax.jit(self._decode_paged_fn, out_shardings=out_s)
+                self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn, out_shardings=out_s)
+                self._fused_step_jit = jax.jit(self._fused_step_fn, out_shardings=out_s)
+            else:
+                self._decode_paged_jit = jax.jit(self._decode_paged_fn)
+                self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn)
+                self._fused_step_jit = jax.jit(self._fused_step_fn)
         else:
+            self.pool_layout = None
             self.cache = init_cache(cfg, max_batch, max_seq)
             self._decode_jit = jax.jit(self._decode_fn)
             self._prefill_jit: Dict[int, Any] = {}
@@ -224,7 +262,61 @@ class GenerationEngine:
             s["prefix_hit_tokens"] = self.kv.shared_token_hits
             s["free_blocks"] = self.kv.pool.n_free
             s["measured_hit_rate"] = self.measured_hit_rate()
+            s["tp_degree"] = self.pool_layout.tp_degree if self.pool_layout else 1
         return s
+
+    def audit_collectives(self, which: str = "fused") -> Dict[str, int]:
+        """Compile one of the engine's step programs against representative
+        inputs and census its collective ops (models.shardmap_tp
+        .count_collectives) — the schedule audit behind the sharded-pool
+        contract: ``"fused"`` (the interleaved mixed batch) and ``"decode"``
+        (block-table batched decode) must show ZERO all-gathers — the
+        gather/scatter over host-resident block tables never communicates —
+        and only the Megatron all-reduces; ``"pool"`` (a bare
+        gather_paged_batch + write_paged_chunk_batch roundtrip, the decode
+        chunk-scatter path in isolation) must be collective-free entirely."""
+        from repro.models.shardmap_tp import count_collectives
+
+        B, C = self.max_batch, self.prefill_chunk_size
+        k, v = self.kv.k, self.kv.v
+        tokens = jnp.zeros((B, C), jnp.int32)
+        starts = jnp.zeros((B,), jnp.int32)
+        n_valid = jnp.ones((B,), jnp.int32)
+        seg = jnp.zeros((B, C), jnp.int32)
+        if which == "fused":
+            tables = jnp.full((B, self._view_blocks), self._null_block, jnp.int32)
+            lowered = self._fused_step_jit.lower(
+                self.params, k, v, tables, tokens, starts, n_valid, seg, seg, seg
+            )
+        elif which == "decode":
+            tables = jnp.full((B, self.max_blocks), self._null_block, jnp.int32)
+            lowered = self._decode_paged_jit.lower(
+                self.params, k, v, tables, tokens[:, :1], starts
+            )
+        elif which == "pool":
+            bs = self.block_size
+
+            def roundtrip(k_pool, tables, starts, new_kv, n_valid):
+                view = gather_paged_batch(k_pool, tables)
+                out = write_paged_chunk_batch(
+                    k_pool, tables, starts, new_kv, bs, n_valid, self._null_block
+                )
+                return out, view
+
+            G, KVH, hd = k.shape[0], k.shape[3], k.shape[4]
+            new_kv = jnp.zeros((G, B, C, KVH, hd), k.dtype)
+            tables = jnp.full((B, self._view_blocks), self._null_block, jnp.int32)
+            if self.pool_layout is not None:
+                pool_s = self.pool_layout.pool_sharding(self.cfg, self.kv.pool.n_blocks)
+                entry_s = self.pool_layout.kv_entry_sharding(self.cfg)
+                new_kv = jax.device_put(new_kv, entry_s)
+                fn = jax.jit(roundtrip, out_shardings=(pool_s, entry_s))
+            else:
+                fn = jax.jit(roundtrip)
+            lowered = fn.lower(k, tables, starts, new_kv, n_valid)
+        else:
+            raise ValueError(f"unknown audit target {which!r}")
+        return count_collectives(lowered.compile())
 
     def measured_hit_rate(self, window: int = 256) -> float:
         """Rolling token-weighted prefix hit rate over recently finished
@@ -279,7 +371,9 @@ class GenerationEngine:
         if self.backend != "paged":
             return True  # dense: a free slot is the only admission resource
         cap = self._prompt_cap(req)
-        if self.kv.pool.blocks_needed(cap + self.block_size) > self.kv.pool.n_blocks - 1:
+        # fit check against blocks THIS engine may allocate (a DP replica owns
+        # a block range of the shared pool); -1 for the reserved scratch block
+        if self.kv.pool.blocks_needed(cap + self.block_size) > self.kv.pool.n_owned - 1:
             # can never fit, even with the whole pool free: fail the request
             # instead of wedging the queue
             req.done = True
@@ -761,6 +855,89 @@ class GenerationEngine:
                 self.slots[req.slot] = None
             if self.backend == "paged":
                 self.kv.release(req.req_id)
+
+
+class DataParallelEngineGroup:
+    """DP replicas of the paged engine over ONE block pool, partitioned by
+    block range — the data-axis half of the sharded-pool layout.
+
+    Each replica is a full GenerationEngine with **independent admission**:
+    its own free list over a disjoint block range (``sharded_pool.
+    block_range``), its own refcounts, prefix index and warm LRU — no
+    cross-replica coordination on the hot path, which is the point of DP.
+    All replicas share one ``PoolArrays`` box (and one params tree), so on a
+    ("data", "model") mesh the arrays shard blocks over "data" and KV heads
+    over "model" and each replica's blocks are its data-shard. Replicas do
+    NOT share prefix blocks (each index only points into its own range);
+    cross-replica sharing is the ROADMAP "distributed block store" item.
+
+    ``submit`` routes least-loaded (fewest active + queued requests);
+    ``step`` advances every replica once. Greedy outputs are identical to a
+    lone engine serving the same request — same params, same per-request
+    math — which tests/test_sharded_pool.py checks.
+
+    Known startup cost: each replica traces/compiles its own step programs
+    (its scratch-block id is baked into the trace as a constant), so group
+    construction compiles ~3*dp programs; passing the scratch id as a traced
+    operand would let replicas share one compilation."""
+
+    def __init__(self, cfg, dp: int = 2, max_batch: int = 4, max_seq: int = 256,
+                 block_size: int = 16, n_blocks_per_replica: Optional[int] = None,
+                 prefix_sharing: bool = True, pool_layout: Optional[ShardedPoolLayout] = None,
+                 seed: int = 0, **engine_kwargs):
+        if dp < 1:
+            raise ValueError("dp must be >= 1")
+        max_blocks = -(-max_seq // block_size)
+        per = n_blocks_per_replica or (max_batch * (max_blocks + 1) + 1)
+        total = per * dp
+        self.pool_layout = pool_layout
+        self.engines: List[GenerationEngine] = []
+        arrays: Optional[PoolArrays] = None
+        params = None
+        for rank in range(dp):
+            lo, hi = block_range(total, dp, rank)
+            kv = PagedKVCache(
+                cfg, total, block_size, max_blocks, prefix_sharing=prefix_sharing,
+                layout=pool_layout, block_range=(lo, hi), arrays=arrays,
+            )
+            eng = GenerationEngine(
+                cfg, params=params, max_batch=max_batch, max_seq=max_seq,
+                seed=seed, block_size=block_size, kv=kv, pool_layout=pool_layout,
+                **engine_kwargs,
+            )
+            arrays = kv._arrays   # replicas 1.. attach to replica 0's box
+            params = eng.params   # and reuse its (placed) params tree
+            self.engines.append(eng)
+
+    def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
+               priority: float = 0.0) -> Request:
+        eng = min(
+            self.engines,
+            key=lambda e: len(e.waiting) + sum(s is not None for s in e.slots),
+        )
+        return eng.submit(prompt, max_new, temperature, priority)
+
+    def step(self) -> None:
+        for eng in self.engines:
+            if eng.waiting or any(eng.slots):
+                eng.step()
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        while max_steps and any(
+            e.waiting or any(e.slots) for e in self.engines
+        ):
+            self.step()
+            max_steps -= 1
+
+    def stats(self) -> Dict[str, Any]:
+        per = [e.stats() for e in self.engines]
+        return {
+            "dp_degree": len(self.engines),
+            "tokens_out": sum(s["tokens_out"] for s in per),
+            "prefill_tokens": sum(s["prefill_tokens"] for s in per),
+            "preemptions": sum(s["preemptions"] for s in per),
+            "replicas": per,
+        }
 
 
 def _shareable_doc_heads(segprompt, block_size: int) -> set:

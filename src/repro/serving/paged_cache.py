@@ -28,7 +28,13 @@ when the hitting request backpressures).
 
 Pool layout per layer-kind group (matching models.model.init_cache):
     k/v: (G, n_blocks, block_size, KVH, hd)
-Block tables: (max_seqs, max_blocks_per_seq) int32, -1 = unallocated.
+Block tables: (max_seqs, max_blocks_per_seq) int32, -1 = unallocated
+(``PagedPool.table_array`` documents the full contract).
+
+Under a TP/DP mesh the pool arrays are sharded — KV-head dim over the model
+axis, optionally block dim over the data axis — while every structure in this
+file's allocator stays replicated host-side metadata; see
+``serving.sharded_pool`` and ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -59,10 +65,15 @@ class PagedPool:
     cached: List[int] = field(default_factory=list)             # warm, LRU order
     on_free: Optional[Callable[[int], None]] = None             # block truly freed
     keep_on_release: Optional[Callable[[int], bool]] = None     # warm-cache policy
+    n_owned: int = 0     # blocks this allocator may hand out (DP block range)
 
     def __post_init__(self):
         if not self.free_list:
             self.free_list = list(range(self.n_blocks))
+        if not self.n_owned:
+            # a DP replica owns only its block range (its seeded free_list);
+            # a whole-pool allocator owns every block
+            self.n_owned = len(self.free_list)
 
     @property
     def n_free(self) -> int:
@@ -138,14 +149,33 @@ class PagedPool:
                         self.on_free(b)
 
     def table_array(self, seq_ids: List[int], max_blocks: int) -> np.ndarray:
+        """Dense block-table rows for a batch of sequences.
+
+        CONTRACT (the one all callers and device ops assume — regression-
+        tested in tests/test_sharded_pool.py):
+
+        * dtype is exactly ``np.int32`` (block-table gathers are traced with
+          int32 index arithmetic; an int64 table retraces every jit);
+        * entries past a sequence's chain are padded with ``-1`` ("no block"),
+          NEVER ``0`` — block 0 is an ordinary allocatable block (and usually
+          the engine's scratch block), so 0-padding would silently alias it;
+        * device-side consumers must therefore treat negatives as absent:
+          gathers clamp (``gather_paged_batch``/``paged_validity``), scatters
+          re-route padded slots to the scratch block
+          (``write_paged_chunk_batch``). The engine's fused step additionally
+          rewrites ``-1`` entries to its scratch block id before tracing.
+        """
         out = np.full((len(seq_ids), max_blocks), -1, dtype=np.int32)
         for i, sid in enumerate(seq_ids):
             blocks = self.tables.get(sid, [])[:max_blocks]
             out[i, : len(blocks)] = blocks
+        assert out.dtype == np.int32  # the contract above; never silently widen
         return out
 
     def utilization(self) -> float:
-        return 1.0 - self.n_free / max(self.n_blocks, 1)
+        """Allocated fraction of the blocks THIS allocator owns (a DP
+        replica's utilization is over its block range, not the shared pool)."""
+        return 1.0 - self.n_free / max(self.n_owned, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +280,20 @@ def _chunk_hash(prev: bytes, tokens_block: np.ndarray) -> bytes:
 
 
 def prefix_block_keys(tokens, block_size: int) -> List[bytes]:
-    """Chained hash keys for every FULL block of ``tokens``."""
+    """Chained hash keys for every FULL block of ``tokens``.
+
+    Invariants:
+
+    * returns exactly ``len(tokens) // block_size`` keys — the trailing
+      partial block (if any) is NEVER keyed, because a partially filled block
+      is still mutable and must not be shared;
+    * ``keys[i]`` is a function of tokens ``[0, (i+1)*block_size)`` — the
+      whole prefix, not just block ``i`` — so two requests may share block
+      ``i`` only when their first ``(i+1)*block_size`` tokens are identical
+      (exactly the condition under which classic causal K/V is bit-identical);
+    * deterministic across processes (sha1 over the int64 token bytes), so
+      keys are stable cache identities, not per-run ids.
+    """
     toks = np.asarray(tokens)
     keys: List[bytes] = []
     prev = b""
@@ -268,6 +311,23 @@ class Admission:
     shared_spans: List[Tuple[int, int]]  # token ranges prefill may skip
 
 
+class PoolArrays:
+    """Device-side k/v pool arrays, boxed so they can be shared.
+
+    DP replicas run independent admission over disjoint block ranges of ONE
+    pool array (the data-axis story of serving.sharded_pool): every replica's
+    PagedKVCache holds the same PoolArrays box, and the engines' functional
+    array updates (``cache.k = new_k``) publish through it, so a replica
+    always steps against the latest array containing every replica's blocks.
+    Disjoint block ranges make the interleaved updates conflict-free."""
+
+    __slots__ = ("k", "v")
+
+    def __init__(self, k, v):
+        self.k = k
+        self.v = v
+
+
 class PagedKVCache:
     """End-to-end paged cache for one model: pools per layer-group position.
 
@@ -282,30 +342,72 @@ class PagedKVCache:
     ``admit_tokens``/``register_prefix`` take an optional
     ``serving.segments.SegmentLayout``: segmented prompts key per-document
     blocks independently of document order, so hits can be non-contiguous
-    (``Admission.shared_spans`` lists every skippable token range)."""
+    (``Admission.shared_spans`` lists every skippable token range).
+
+    Mesh sharding: ``layout`` (serving.sharded_pool.ShardedPoolLayout) places
+    the k/v arrays over a TP/DP mesh — partitioned over the KV-head dim on
+    the model axis, optionally over the block dim on the data axis. All host
+    metadata (block tables, refcounts, prefix index, warm LRU) stays
+    replicated host state regardless of the mesh. ``block_range`` restricts
+    allocation to [lo, hi) for a DP replica with independent admission, and
+    ``arrays`` shares one PoolArrays box between such replicas. Without a
+    layout, construction and math are bit-identical to the single-device
+    engine."""
 
     def __init__(self, cfg, n_blocks: int = 256, block_size: int = 16,
-                 max_blocks_per_seq: int = 64, prefix_sharing: bool = True):
+                 max_blocks_per_seq: int = 64, prefix_sharing: bool = True,
+                 layout=None, block_range: Optional[Tuple[int, int]] = None,
+                 arrays: Optional[PoolArrays] = None):
         from repro.models import transformer as tfm
 
         self.cfg = cfg
         self.block_size = block_size
         self.max_blocks = max_blocks_per_seq
+        self.layout = layout
         p = tfm.period(cfg)
         G = cfg.num_layers // p
         dtype = jnp.dtype(cfg.dtype)
+        lo, hi = block_range if block_range is not None else (0, n_blocks)
+        if not (0 <= lo < hi <= n_blocks):
+            raise ValueError(f"block_range {(lo, hi)} outside [0, {n_blocks})")
         self.pool = PagedPool(
             n_blocks, block_size,
+            free_list=list(range(lo, hi)),
             on_free=self._forget_block,
             keep_on_release=lambda b: b in self._block_key,
         )
-        self.k = jnp.zeros((G, n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim), dtype)
-        self.v = jnp.zeros_like(self.k)
+        if arrays is None:
+            k = jnp.zeros(
+                (G, n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim), dtype
+            )
+            if layout is not None:
+                layout.validate(cfg)
+                k = jax.device_put(k, layout.pool_sharding(cfg, n_blocks))
+            arrays = PoolArrays(k, jnp.zeros_like(k))
+        self._arrays = arrays
         self.lengths: Dict[int, int] = {}
         self.prefix_sharing = prefix_sharing
         self._prefix_index: Dict[bytes, int] = {}   # chain hash -> block id
         self._block_key: Dict[int, bytes] = {}      # reverse map for eviction
         self.shared_token_hits = 0                  # prompt tokens served from shared blocks
+
+    # k/v proxy the shared PoolArrays box: DP replicas see each other's
+    # functional updates; the single-engine case is a plain attribute pair
+    @property
+    def k(self):
+        return self._arrays.k
+
+    @k.setter
+    def k(self, value):
+        self._arrays.k = value
+
+    @property
+    def v(self):
+        return self._arrays.v
+
+    @v.setter
+    def v(self, value):
+        self._arrays.v = value
 
     # ----------------------------------------------------------- host side
     def _forget_block(self, block_id: int):
@@ -338,7 +440,28 @@ class PagedKVCache:
         record (shared token count + skippable spans) — or None when the pool
         cannot fit the request (backpressure). Flat prompts fall back to the
         whole-prompt chained hash (hits form one leading span); segmented
-        prompts can hit per-document blocks anywhere in the layout."""
+        prompts can hit per-document blocks anywhere in the layout.
+
+        Invariants (each has a dedicated regression test):
+
+        * **all-or-nothing**: on backpressure (None) NOTHING was allocated or
+          shared — free-block count, refcounts and ``tables[seq_id]`` are
+          untouched, so a deferred request retries with no cleanup. Headroom
+          accounting counts new blocks AND warm revivals (a shared warm block
+          leaves the LRU queue and consumes ``n_free``).
+        * on success, ``tables[seq_id]`` holds exactly
+          ``blocks_needed(len(tokens)) + 1`` entries in prompt-block order
+          (the +1 is the decode slack block), shared hits refcount-bumped in
+          place, misses freshly allocated with refcount 1.
+        * the block containing the FINAL prompt token is never served from
+          cache: at least one prompt token must run through the model to
+          produce the first-sample logits (``_block_hits`` skips it).
+        * ``Admission.shared_spans`` are disjoint, sorted, block-aligned
+          token ranges; ``n_shared == sum(hi - lo for lo, hi in spans)``, and
+          the engine's prefill cursor may skip exactly these ranges.
+        * hits touch warm blocks (LRU re-heat) even if the caller then
+          backpressures — a hot shared prefix must outlive cold blocks.
+        """
         from repro.serving.segments import build_layout
 
         Lp = len(tokens)
@@ -374,10 +497,26 @@ class PagedKVCache:
 
     def register_prefix(self, seq_id: int, tokens, layout=None):
         """Publish this sequence's fully written prompt blocks into the prefix
-        index so later requests reuse them. Only immutable blocks qualify:
-        keyed blocks are full blocks inside one segment ((i+1)*bs <=
-        len(tokens) always holds for them); decode writes land strictly after
-        the prompt, so published blocks are never mutated."""
+        index so later requests reuse them.
+
+        Invariants:
+
+        * **only immutable blocks are published**: keyed blocks are FULL
+          blocks lying inside one segment (``(i+1) * block_size <=
+          len(tokens)`` holds for every keyed ordinal ``i``), and decode
+          writes land strictly after the prompt — so a published block's
+          contents never change while the index points at it.
+        * MUST be called only after the prompt's K/V has actually been
+          written through ordinal ``i`` (the engine calls it when the prefill
+          cursor completes); publishing earlier would let a follower gather
+          zeros.
+        * first writer wins: an already-indexed key is never re-pointed, so
+          concurrent identical prompts converge on one physical block chain.
+        * the reverse map ``_block_key`` stays exact: a block evicted from
+          the warm cache drops its index entry (``_forget_block``), so the
+          index never dangles into reallocated blocks — the no-leak invariant
+          the randomized engine harness checks.
+        """
         if not self.prefix_sharing:
             return
         from repro.serving.segments import build_layout
@@ -406,6 +545,8 @@ class PagedKVCache:
         self.lengths.pop(seq_id, None)
 
     def batch_tables(self, seq_ids: List[int]) -> np.ndarray:
+        """Block-table rows truncated to ``max_blocks`` — same contract as
+        ``PagedPool.table_array`` (int32, pad = -1, never 0)."""
         return self.pool.table_array(seq_ids, self.max_blocks)
 
     # --------------------------------------------------------- device side

@@ -194,7 +194,33 @@ def _segment_block_keys(
 
 def build_layout(prompt, block_size: int, cap: Optional[int] = None) -> SegmentLayout:
     """Compute the prefill plan for ``prompt`` (SegmentedPrompt or flat
-    tokens), truncated to ``cap`` tokens (engine capacity)."""
+    tokens), truncated to ``cap`` tokens (engine capacity).
+
+    Invariants the paged cache and engine rely on:
+
+    * **packing**: segments occupy contiguous cache slots in layout order
+      with no holes; ``tokens`` is exactly the packed (truncated) prompt and
+      ``len(block_keys) == ceil(len(tokens) / block_size)``.
+    * **key scoping**: ``block_keys[b]`` is non-None only for a FULL block
+      lying entirely inside one segment. A doc block's key depends on
+      (prelude tokens, the doc's own tokens up to that block) and NOTHING
+      else — that is the exact set its K/V depends on under the segmented
+      prefill semantics, so equal key <=> bit-identical block. Blocks
+      straddling a segment boundary, trailing partial blocks, and anything
+      past ``cap`` are never keyed (never shared).
+    * **flat degeneration**: a flat/single-segment prompt yields ``pos_ids ==
+      arange``, ``attn_p_end == attn_s_start == 0`` (plain causal) and
+      ``block_keys == prefix_block_keys(tokens)`` — the classic whole-prompt
+      chained hash, so flat and segmented requests share one index.
+    * **attention spans**: for every token ``t``, the attendable slot set is
+      ``[0, attn_p_end[t]) U [attn_s_start[t], t]``; prelude/tail tokens have
+      both bounds 0 (full causal), doc tokens have ``p_end = prelude_end``
+      and ``s_start`` = their segment start, and their ``pos_ids`` restart at
+      ``prelude_end`` — the order-independence construction.
+    * **truncation**: ``cap`` truncates mid-segment rather than dropping
+      whole segments; a truncated doc segment keeps its (now shorter) span
+      and keys only the full blocks that survived.
+    """
     if not isinstance(prompt, SegmentedPrompt):
         prompt = SegmentedPrompt.flat(prompt)
     bs = block_size

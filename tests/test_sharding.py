@@ -152,3 +152,46 @@ def test_serve_mode_strips_fsdp():
         pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         if "attn/wq" in pstr or "mlp/w_gate" in pstr:
             assert "data" not in tuple(spec), (pstr, spec)  # TP-resident
+
+
+def test_pool_pspecs_policy():
+    """Paged pool (G, n_blocks, bs, KVH, hd): KV heads over "model" when
+    divisible, blocks only over "data" and only on request — NEVER over
+    "model" (the block-table gather must stay shard-local)."""
+    from repro.models.sharding import pool_pspecs
+
+    cfg = get_arch("phi3-medium-14b")  # 10 kv heads: divides neither 16 nor 4
+    assert pool_pspecs(cfg, {"model": 16}) == P(None, None, None, None, None)
+    cfg2 = get_arch("qwen2.5-3b")  # 2 kv heads
+    assert pool_pspecs(cfg2, {"model": 2}) == P(None, None, None, "model", None)
+    spec = pool_pspecs(cfg2, {"data": 4, "model": 2}, dp_blocks=True)
+    assert spec == P(None, "data", None, "model", None)
+    assert "model" not in (spec[1],)  # blocks never shard over model
+    # explicit divisibility applies to the block dim when n_blocks is known
+    assert pool_pspecs(cfg2, {"data": 4, "model": 2}, dp_blocks=True,
+                       n_blocks=70) == P(None, None, None, "model", None)
+    assert pool_pspecs(cfg2, {"data": 4, "model": 2}, dp_blocks=True,
+                       n_blocks=72) == P(None, "data", None, "model", None)
+
+
+def test_serve_engine_pspecs_embed_replicated():
+    """The sharded-engine param layout: TP everywhere param_pspecs(serve)
+    says so, but embed/lm_head forced replicated (keeps the fused step free
+    of vocab-dim collectives — the audit contract)."""
+    from repro.models.sharding import serve_engine_pspecs
+
+    cfg = get_arch("qwen2.5-3b")
+    params = abstract_params(cfg)
+    specs = serve_engine_pspecs(cfg, params, {"model": 2})
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    checked = {"embed": False, "attn": False}
+    for path, spec in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if pstr.startswith(("embed", "lm_head")):
+            assert all(a is None for a in tuple(spec)), (pstr, spec)
+            checked["embed"] = True
+        if "attn/wq" in pstr:
+            assert "model" in tuple(spec), (pstr, spec)  # still TP-sharded
+            assert "data" not in tuple(spec), (pstr, spec)  # still serve-mode
+            checked["attn"] = True
+    assert all(checked.values())
