@@ -65,7 +65,12 @@ def solve_allocation(
     alpha — the retrieval-aware cache feedback path: a Generator whose
     measured prefix hit rate makes requests cheaper gets alpha scaled up
     (``profiling.generator_alpha_scale``), so the LP provisions fewer
-    replicas for the same load as cache effectiveness shifts.
+    replicas for the same load as cache effectiveness shifts. The scale folds
+    BOTH cache tiers: HBM-shared prompt tokens are free, host-tier
+    (``HostBlockStore``) promotions cost only the block-copy rate — the
+    controller passes measured ``prefix_hit_rate`` and ``host_hit_rate``
+    against the rates baked into the fitted alpha, keeping the discount
+    linear in r (a pure alpha multiplier, never a new constraint).
     ``resource_penalty``: tiny per-resource-unit objective cost; with a
     ``source_rate`` cap the throughput optimum is degenerate in resources, so
     a nonzero penalty makes the solver return the *cheapest* optimal plan

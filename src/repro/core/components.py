@@ -121,6 +121,11 @@ class Generator(Component):
     decode_per_token_s = 0.00045           # flat weights-read term / new token
     decode_cache_per_ctx_token_s = 2.25e-8  # KV-read term / context token / step
     prefix_hit_rate = 0.0                   # shared-prefix fraction of the prompt
+    # host-tier second-chance hits: the fraction of prompt tokens promoted
+    # from the host block store costs a host->device block copy instead of
+    # prefill compute — much cheaper than recompute, not free like an HBM hit
+    host_hit_rate = 0.0
+    host_promote_per_token_s = 1.2e-6
     # chunked-prefill TTFT term: with Sarathi-style interleaving the prompt
     # streams through budget-bounded chunks that share each step with decode,
     # so time-to-first-token has its own (steeper) per-token slope than the
@@ -193,21 +198,47 @@ class Generator(Component):
 
     def effective_hit_rate(self) -> float:
         """The prefix hit rate the cost model should bill: the *measured*
-        rolling rate from a live engine's telemetry when one is attached
-        (and has served traffic), else the statically configured/calibrated
-        ``prefix_hit_rate``."""
+        rolling rate from a live engine's telemetry when one is attached and
+        its window is warm, else the statically configured/calibrated
+        ``prefix_hit_rate``. The engine's cold-start clamp makes the fallback
+        explicit: below its minimum-token window, ``measured_hit_rate``
+        returns the ``default`` we pass — the static rate — instead of a
+        noisy first-request sample that would stampede the LP's
+        alpha_scale."""
         eng = self.engine
-        if eng is not None and getattr(eng, "finished", None):
+        if eng is not None:
             measure = getattr(eng, "measured_hit_rate", None)
             if measure is not None:
-                return float(measure())
+                return float(measure(default=self.prefix_hit_rate))
         return self.prefix_hit_rate
 
-    def estimate_time(self, features, hit_rate: Optional[float] = None):
+    def effective_host_hit_rate(self) -> float:
+        """Host-tier hit rate to bill (measured when warm, else the static
+        ``host_hit_rate``) — same cold-start fallback as
+        ``effective_hit_rate``."""
+        eng = self.engine
+        if eng is not None:
+            measure = getattr(eng, "measured_host_hit_rate", None)
+            if measure is not None:
+                return float(measure(default=self.host_hit_rate))
+        return self.host_hit_rate
+
+    def _tier_rates(self, hit_rate, host_hit_rate):
+        """Resolve (HBM, host) hit fractions; the tiers partition the prompt,
+        so the host share is clamped into the remainder of the HBM share."""
         h = self.effective_hit_rate() if hit_rate is None else hit_rate
+        hh = self.effective_host_hit_rate() if host_hit_rate is None else host_hit_rate
+        return h, min(max(hh, 0.0), max(1.0 - h, 0.0))
+
+    def estimate_time(self, features, hit_rate: Optional[float] = None,
+                      host_hit_rate: Optional[float] = None):
+        h, hh = self._tier_rates(hit_rate, host_hit_rate)
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
         tout = features.get("tokens_out", self.max_new)
-        prefill = tin * (1.0 - h) * self.prefill_per_token_s
+        # three-tier prompt: HBM-shared tokens are free, host-promoted tokens
+        # cost the copy, the rest pays full prefill compute
+        prefill = tin * ((1.0 - h - hh) * self.prefill_per_token_s
+                         + hh * self.host_promote_per_token_s)
         avg_ctx = tin + 0.5 * tout  # mean context length over the decode
         decode = tout * (
             self.decode_per_token_s + avg_ctx * self.decode_cache_per_ctx_token_s
@@ -217,16 +248,19 @@ class Generator(Component):
         # shrink with the mesh
         return self.base_time_s + (prefill + decode) / self.tp_speedup()
 
-    def estimate_ttft(self, features, hit_rate: Optional[float] = None):
+    def estimate_ttft(self, features, hit_rate: Optional[float] = None,
+                      host_hit_rate: Optional[float] = None):
         """Time-to-first-token under chunked interleaved prefill: the
         non-shared prompt tokens stream through token-budget chunks, so TTFT
         scales with computed prompt tokens at the interleaved (per-step) rate
-        rather than the saturated prefill throughput. TP divides the per-chunk
-        compute like every other token term."""
-        h = self.effective_hit_rate() if hit_rate is None else hit_rate
+        rather than the saturated prefill throughput; host-promoted tokens
+        pay the copy rate instead. TP divides the per-chunk compute like
+        every other token term."""
+        h, hh = self._tier_rates(hit_rate, host_hit_rate)
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
-        return self.base_time_s + tin * (1.0 - h) * (
-            self.ttft_per_prefill_token_s
+        return self.base_time_s + tin * (
+            (1.0 - h - hh) * self.ttft_per_prefill_token_s
+            + hh * self.host_promote_per_token_s
         ) / self.tp_speedup()
 
     def output_features(self, features):
@@ -253,13 +287,17 @@ class Grader(Generator):
         rnd = random.random()
         return rnd < threshold
 
-    def estimate_time(self, features, hit_rate: Optional[float] = None):
+    def estimate_time(self, features, hit_rate: Optional[float] = None,
+                      host_hit_rate: Optional[float] = None):
         # reads the full retrieved context; ~1.8x the generator's runtime in
         # C-RAG per the paper's Fig. 10 measurement. Shared document blocks
-        # discount this prefill-dominated stage like any Generator.
-        h = self.effective_hit_rate() if hit_rate is None else hit_rate
+        # discount this prefill-dominated stage like any Generator (host-
+        # promoted blocks at the copy rate).
+        h, hh = self._tier_rates(hit_rate, host_hit_rate)
         tin = features.get("docs_tokens", 10000) + features.get("tokens_in", 0)
-        return self.base_time_s + tin * (1.0 - h) * self.prefill_per_token_s * 3 + self.decode_per_token_s
+        prefill = tin * ((1.0 - h - hh) * self.prefill_per_token_s * 3
+                         + hh * self.host_promote_per_token_s)
+        return self.base_time_s + prefill + self.decode_per_token_s
 
 
 class Rewriter(Generator):
@@ -269,7 +307,8 @@ class Rewriter(Generator):
         self._record()
         return query
 
-    def estimate_time(self, features, hit_rate: Optional[float] = None):
+    def estimate_time(self, features, hit_rate: Optional[float] = None,
+                      host_hit_rate: Optional[float] = None):
         return self.base_time_s + features.get("tokens_in", 64) * self.prefill_per_token_s + 24 * self.decode_per_token_s
 
 
@@ -280,7 +319,8 @@ class Critic(Generator):
         self._record()
         return random.random()
 
-    def estimate_time(self, features, hit_rate: Optional[float] = None):
+    def estimate_time(self, features, hit_rate: Optional[float] = None,
+                      host_hit_rate: Optional[float] = None):
         tin = features.get("tokens_out", 64) + features.get("docs_tokens", 0) * 0.2
         return self.base_time_s + tin * self.prefill_per_token_s * 3 + self.decode_per_token_s
 

@@ -436,23 +436,29 @@ class PatchworkRuntime:
                 meta.alpha = {dom: (1.0 / float(np.mean(obs[-512:]))) / per_inst}
                 comp_obj = self.app.components.get(comp)
                 if isinstance(comp_obj, Generator):
-                    # the observed service times embed whatever hit rate the
-                    # cache was delivering while they were recorded
+                    # the observed service times embed whatever hit rates the
+                    # cache tiers were delivering while they were recorded
                     meta.alpha_hit_rate = comp_obj.effective_hit_rate()
+                    meta.alpha_host_hit_rate = comp_obj.effective_host_hit_rate()
         if self._traces:
             g.update_from_traces(self._traces[-512:])
         # retrieval-aware cache feedback: a Generator whose measured prefix
-        # hit rate moved since its alpha was fitted gets the capacity delta
-        # applied at solve time (export the rate online for observability)
+        # or host-tier hit rate moved since its alpha was fitted gets the
+        # capacity delta applied at solve time (export both rates online as
+        # controller gauges for observability)
         alpha_scale: Dict[str, float] = {}
         for comp, comp_obj in self.app.components.items():
             if not isinstance(comp_obj, Generator) or comp not in g.nodes:
                 continue
             h = comp_obj.effective_hit_rate()
+            hh = comp_obj.effective_host_hit_rate()
             self.telemetry.gauge(f"prefix_hit_rate/{comp}", self.clock.now, h)
+            self.telemetry.gauge(f"host_hit_rate/{comp}", self.clock.now, hh)
             baked = g.nodes[comp].alpha_hit_rate
+            baked_host = g.nodes[comp].alpha_host_hit_rate
             scale = generator_alpha_scale(
-                comp_obj, hit_rate=h, baseline_hit_rate=baked or 0.0
+                comp_obj, hit_rate=h, baseline_hit_rate=baked or 0.0,
+                host_hit_rate=hh, baseline_host_hit_rate=baked_host or 0.0,
             )
             if abs(scale - 1.0) > 1e-3:
                 alpha_scale[comp] = scale

@@ -49,9 +49,11 @@ def profile_components(
                 times.append(time.perf_counter() - t0)
             elif cold:
                 # cold-cache baseline: the LP discounts Generator alpha by the
-                # *measured* hit rate at solve time (solve_allocation
-                # alpha_scale), so the fit must not bake a hit rate in twice
-                times.append(comp.estimate_time(feats, hit_rate=0.0))
+                # *measured* hit rates at solve time (solve_allocation
+                # alpha_scale), so the fit must not bake any tier's rate in
+                # twice — HBM and host both evaluated cold
+                times.append(comp.estimate_time(feats, hit_rate=0.0,
+                                                host_hit_rate=0.0))
             else:
                 times.append(comp.estimate_time(feats))
         mean_t = float(np.mean(times))
@@ -66,10 +68,13 @@ def profile_components(
         # branch was explicitly evaluated cold
         if not cold:
             meta.alpha_hit_rate = None
+            meta.alpha_host_hit_rate = None
         elif ran_real:
             meta.alpha_hit_rate = float(comp.effective_hit_rate())
+            meta.alpha_host_hit_rate = float(comp.effective_host_hit_rate())
         else:
             meta.alpha_hit_rate = 0.0
+            meta.alpha_host_hit_rate = 0.0
 
 
 def calibrate_generator_from_engine(
@@ -155,20 +160,27 @@ def generator_alpha_scale(
     features: Optional[Dict[str, float]] = None,
     hit_rate: Optional[float] = None,
     baseline_hit_rate: float = 0.0,
+    host_hit_rate: Optional[float] = None,
+    baseline_host_hit_rate: float = 0.0,
 ) -> float:
-    """Capacity multiplier the observed prefix hit rate buys a Generator:
-    alpha was fitted at ``baseline_hit_rate`` (0 = cold cache), so one
-    resource unit now sustains ``t(baseline)/t(observed)`` times the fitted
-    request rate. Fed to ``solve_allocation(alpha_scale=...)`` so the LP
-    re-plans Generator capacity as cache effectiveness shifts."""
+    """Capacity multiplier the observed cache hit rates buy a Generator:
+    alpha was fitted at ``baseline_hit_rate`` / ``baseline_host_hit_rate``
+    (0/0 = cold cache, no host tier), so one resource unit now sustains
+    ``t(baseline)/t(observed)`` times the fitted request rate. Both tiers
+    discount independently — HBM hits skip prefill entirely, host-tier
+    promotions pay only the block-copy rate (``Generator
+    .host_promote_per_token_s``). Fed to ``solve_allocation(alpha_scale=...)``
+    so the LP re-plans Generator capacity as cache effectiveness shifts."""
     feats = features or {
         "tokens_in": 128.0,
         "docs_tokens": 2000.0,
         "tokens_out": float(getattr(gen, "max_new", 64)),
     }
     h = gen.effective_hit_rate() if hit_rate is None else hit_rate
-    t_base = gen.estimate_time(feats, hit_rate=baseline_hit_rate)
-    t_now = gen.estimate_time(feats, hit_rate=h)
+    hh = gen.effective_host_hit_rate() if host_hit_rate is None else host_hit_rate
+    t_base = gen.estimate_time(feats, hit_rate=baseline_hit_rate,
+                               host_hit_rate=baseline_host_hit_rate)
+    t_now = gen.estimate_time(feats, hit_rate=h, host_hit_rate=hh)
     return max(t_base / max(t_now, 1e-12), 1e-6)
 
 

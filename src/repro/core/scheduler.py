@@ -10,10 +10,19 @@ Tasks, ``submitted_at`` for engine Requests), so one policy object serves
 both the cluster simulator's dispatch queues and the generation engine's
 admission + prefill-budget hooks (which waiting request gets admitted, and
 which mid-prefill request gets the next chunk of the step's token budget).
+
+Eviction-aware admission: the paged engine binds a *residency* probe into
+its policy (``bind_residency``) scoring how much of a waiting request's
+prompt is already resident in the KV tiers (HBM-shared blocks weigh full,
+host-tier blocks half). ``resident_first`` prefers resident requests —
+admitting them consumes fewer fresh blocks and zero (or cheap) prefill, and
+doing so *before* the resident blocks age out of the LRU/host tiers is what
+makes the cache hit rate self-reinforcing instead of self-defeating —
+falling back to slack/arrival order among equals.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 
 def _arrival(item) -> float:
@@ -26,6 +35,17 @@ def _arrival(item) -> float:
 
 class QueuePolicy:
     name = "fifo"
+
+    _residency_fn: Optional[Callable] = None
+
+    def bind_residency(self, fn: Callable) -> None:
+        """Attach a residency probe (item -> [0, 1] resident fraction). The
+        engine binds its own probe at construction; policies that ignore
+        residency simply never call it."""
+        self._residency_fn = fn
+
+    def residency(self, item) -> float:
+        return self._residency_fn(item) if self._residency_fn is not None else 0.0
 
     def select(self, queue: Sequence, now: float = 0.0) -> Optional[int]:
         """Index of the next item to serve (None on an empty queue)."""
@@ -61,7 +81,33 @@ class EDFSlack(QueuePolicy):
         )
 
 
+class ResidentFirst(EDFSlack):
+    """Eviction-aware admission: prefer the request whose KV blocks are most
+    resident (HBM or host tier), then least slack, then arrival order.
+
+    Residency is quantized to blocks already (the probe scores whole keyed
+    blocks), so rounding to 3 decimals only guards against float noise in
+    the tie-break, not real signal."""
+
+    name = "resident_first"
+
+    def select(self, queue: Sequence, now: float = 0.0) -> Optional[int]:
+        if not queue:
+            return None
+        return min(
+            range(len(queue)),
+            key=lambda i: (
+                -round(self.residency(queue[i]), 3),
+                getattr(queue[i], "priority", 0.0),
+                _arrival(queue[i]),
+            ),
+        )
+
+
+_POLICIES = {"edf_slack": EDFSlack, "resident_first": ResidentFirst}
+
+
 def make_policy(name) -> QueuePolicy:
     if isinstance(name, QueuePolicy):
         return name
-    return EDFSlack() if name == "edf_slack" else QueuePolicy()
+    return _POLICIES.get(name, QueuePolicy)()

@@ -34,6 +34,7 @@ class ComponentMeta:
     # profiling results (filled by core.profiling)
     alpha: Dict[str, float] = field(default_factory=dict)   # req/s per resource unit
     alpha_hit_rate: Optional[float] = None  # prefix hit rate baked into alpha
+    alpha_host_hit_rate: Optional[float] = None  # host-tier rate baked into alpha
     gamma: float = 1.0                                       # request amplification
     streaming: bool = False
 

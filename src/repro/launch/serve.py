@@ -34,14 +34,19 @@ def serve_sim(app_name: str, rate: float, duration: float, engine: str = "patchw
 
 
 def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
-               tp: int = 1, dp: int = 1):
+               tp: int = 1, dp: int = 1, preempt: str = "recompute",
+               host_blocks: int = 0):
     """Serve a real reduced model with batched requests on this host.
 
     ``tp > 1`` shards the paged engine over a ("model",) mesh — TP-resident
     weights, KV pools partitioned by KV head (serving.sharded_pool); ``dp >
     1`` adds data-parallel replica engines with independent admission over
     block ranges of one shared pool. On CPU, force enough fake devices first:
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+    ``host_blocks > 0`` attaches the host-memory block tier (shared across
+    DP replicas: cross-replica doc-block promotion); ``preempt="swap"``
+    swaps preemption victims to that tier instead of recomputing them."""
     import jax
 
     from repro.configs import get_arch, smoke_variant
@@ -53,11 +58,13 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     layout = None
     if tp > 1 or dp > 1:
         layout = ShardedPoolLayout(make_serving_mesh(tp, dp), dp_blocks=dp > 1)
+    tier = {"preempt": preempt, "host_blocks": host_blocks or None}
     if dp > 1:
         eng = DataParallelEngineGroup(cfg, dp=dp, max_batch=4, max_seq=256,
-                                      pool_layout=layout)
+                                      pool_layout=layout, **tier)
     else:
-        eng = GenerationEngine(cfg, max_batch=4, max_seq=256, pool_layout=layout)
+        eng = GenerationEngine(cfg, max_batch=4, max_seq=256, pool_layout=layout,
+                               **tier)
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(rng.integers(0, cfg.vocab_size, rng.integers(4, 32)), max_new)
@@ -68,8 +75,10 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
         print(f"  req {r.req_id}: {len(r.out_tokens)} tokens "
               f"ttft={1e3*(r.first_token_at - r.submitted_at):.0f}ms")
     stats = eng.stats()
-    print(f"[serve:real] {arch}: tp={tp} dp={dp} "
+    print(f"[serve:real] {arch}: tp={tp} dp={dp} preempt={preempt} "
           f"{stats['tokens_out']} tokens out")
+    if "host_store" in stats:
+        print(f"[serve:real] host tier: {stats['host_store']}")
     if tp > 1 and dp == 1:
         print(f"[serve:real] fused-step collectives: {eng.audit_collectives()}")
 
@@ -89,9 +98,18 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel replica engines with independent "
                          "admission over block ranges of one shared pool")
+    ap.add_argument("--preempt", default="recompute",
+                    choices=["recompute", "swap"],
+                    help="pool-exhaustion strategy: re-queue + re-prefill, "
+                         "or swap the victim's KV to the host tier")
+    ap.add_argument("--host-blocks", type=int, default=0,
+                    help="host-memory block-tier capacity (0 = no host tier "
+                         "unless --preempt swap provisions one); shared "
+                         "across --dp replicas for cross-replica doc reuse")
     args = ap.parse_args(argv)
     if args.real:
-        serve_real(args.arch, tp=args.tp, dp=args.dp)
+        serve_real(args.arch, tp=args.tp, dp=args.dp, preempt=args.preempt,
+                   host_blocks=args.host_blocks)
     else:
         serve_sim(args.app, args.rate, args.duration, args.engine, args.slo)
 

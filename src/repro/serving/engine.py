@@ -38,9 +38,29 @@ chunk quantization. A `core.scheduler.QueuePolicy` (FIFO or EDF-slack)
 orders both admission and the per-step prefill-budget grants.
 ``interleave=False`` keeps the sequential blocking-prefill loop as the
 parity oracle; greedy decode is token-exact across the two modes.
+
+Preemption (paged backend): pool exhaustion picks the youngest active
+request and applies the engine's ``preempt`` strategy —
+
+* ``"recompute"`` (default): release the victim's blocks and re-queue its
+  continuation (prompt + generated tokens); re-admission repays the prefill.
+* ``"swap"``: park the victim's block chain in the host tier
+  (`serving.host_tier.HostBlockStore`, one batched device→host gather) and
+  restore it verbatim on re-admission — greedy-token-identical to recompute
+  without repaying the prefill (falls back to recompute when the host store
+  cannot pin the chain). ``benchmarks/swap_preemption.py`` compares the two
+  under forced pool pressure.
+
+The host tier also backs the warm-cache LRU (evicted warm blocks demote to
+host; admission promotes them back as a second-chance hit class) and, when
+shared across a ``DataParallelEngineGroup``, gives replicas cross-replica
+document-block sharing. Eviction-aware admission closes the loop: the
+``resident_first`` scheduler policy prefers requests whose doc blocks are
+HBM- or host-resident (``core.scheduler``).
 """
 from __future__ import annotations
 
+import copy
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -59,6 +79,7 @@ from repro.models import (
     paged_cache_supported,
     prefill_chunk,
 )
+from repro.serving.host_tier import HostBlockStore
 from repro.serving.paged_cache import (
     PagedKVCache,
     PoolArrays,
@@ -87,10 +108,14 @@ class Request:
     prefill_cap: int = 0             # effective prompt length (post-truncation)
     done: bool = False
     truncated: bool = False          # prompt exceeded engine capacity
-    shared_prefix_tokens: int = 0    # prompt tokens served from shared blocks
+    shared_prefix_tokens: int = 0    # prompt tokens served from HBM-shared blocks
+    host_prefix_tokens: int = 0      # prompt tokens promoted from the host tier
     segprompt: Optional[SegmentedPrompt] = None  # retrieval-aware structure
     layout: Any = None               # SegmentLayout (built at admission)
+    probe_layout: Any = None         # residency-probe layout (pre-admission)
     shared_spans: List = field(default_factory=list)  # token ranges served from cache
+    swapped: bool = False            # KV chain parked in the host tier
+    swap_len: int = 0                # cache length to restore on swap-in
     queued_steps: int = 0            # engine steps spent waiting for admission
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
@@ -108,6 +133,55 @@ class Request:
         """Fraction of this request's (truncated) prompt served from shared
         cache blocks — the per-request quantity the LP allocator consumes."""
         return self.shared_prefix_tokens / self.prefill_cap if self.prefill_cap else 0.0
+
+    @property
+    def host_hit_rate(self) -> float:
+        """Fraction of the prompt promoted from the host tier (the
+        second-chance hit class between an HBM hit and a prefill miss)."""
+        return self.host_prefix_tokens / self.prefill_cap if self.prefill_cap else 0.0
+
+
+def normalize_spans(spans) -> List:
+    """Sorted, disjoint, coalesced ``[lo, hi)`` spans (empties dropped).
+
+    The cursor/grant helpers below assume this normal form; admission output
+    is normalized by construction, but spans that arrive unsorted or
+    overlapping (hand-built, or merged across hit tiers) could otherwise
+    leave the prefill cursor inside a cached span or jump it past an uncached
+    gap — regression-tested in tests/test_host_tier.py."""
+    out: List = []
+    for lo, hi in sorted((int(s), int(e)) for s, e in spans if e > s):
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def _advance_cursor(req: Request) -> None:
+    """Skip the prefill cursor over cache-served spans: shared/promoted
+    blocks already hold the K/V, so the cursor jumps to the next slot needing
+    compute (fully-cached documents cost zero prefill steps). Requires
+    ``req.shared_spans`` in the ``normalize_spans`` normal form — one sorted
+    pass, never past an uncached gap."""
+    for s, e in req.shared_spans:
+        if s <= req.prefill_pos < e:
+            req.prefill_pos = e
+        elif s > req.prefill_pos:
+            break
+    req.prefill_pos = min(req.prefill_pos, req.prefill_cap)
+
+
+def _max_grant(req: Request, limit: int) -> int:
+    """Largest prefill chunk startable at the cursor: clipped by the chunk
+    size, the prompt end, and the next shared span (shared blocks are
+    immutable — a chunk must never write into them)."""
+    c = min(limit, req.prefill_cap - req.prefill_pos)
+    for s, _e in req.shared_spans:
+        if s > req.prefill_pos:
+            c = min(c, s - req.prefill_pos)
+            break  # spans are sorted: the first span ahead is the binding one
+    return max(c, 0)
 
 
 def _bucket(n: int) -> int:
@@ -138,6 +212,9 @@ class GenerationEngine:
         mesh: Any = None,
         pool_layout: Optional[ShardedPoolLayout] = None,
         kv: Optional[PagedKVCache] = None,
+        preempt: str = "recompute",
+        host_store: Optional[HostBlockStore] = None,
+        host_blocks: Optional[int] = None,
     ):
         """``mesh`` / ``pool_layout`` shard the paged backend over a device
         mesh: params become TP-resident (Megatron layout, embed/lm_head
@@ -148,7 +225,15 @@ class GenerationEngine:
         reductions (``audit_collectives`` asserts this). With neither given
         the engine is bit-identical to the historical single-device path.
         ``kv`` injects a pre-built PagedKVCache — the DataParallelEngineGroup
-        uses this to hand replicas block-range slices of one shared pool."""
+        uses this to hand replicas block-range slices of one shared pool (and
+        a shared host store).
+
+        ``preempt`` selects the pool-exhaustion strategy: ``"recompute"``
+        (release + re-queue the continuation) or ``"swap"`` (park the block
+        chain in the host tier, restore on re-admission). ``host_store`` /
+        ``host_blocks`` attach the host-memory tier explicitly; ``host_blocks``
+        sizes a fresh store, and ``preempt="swap"`` provisions one
+        automatically (device-pool-sized) when neither is given."""
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
@@ -160,6 +245,15 @@ class GenerationEngine:
         self.backend = backend
         self.interleave = interleave and backend == "paged"
         self.scheduler: QueuePolicy = make_policy(scheduler)
+        # eviction-aware admission: residency-aware policies score a waiting
+        # request by how much of its prompt is HBM-/host-resident. Never
+        # mutate a caller-supplied policy object: bind into a per-engine copy
+        # — rebinding a shared instance (one object passed to every replica
+        # of a DP group, or reused for a simcluster queue) would score
+        # foreign queues against THIS engine's cache state.
+        if isinstance(scheduler, QueuePolicy):
+            self.scheduler = copy.copy(self.scheduler)
+        self.scheduler.bind_residency(self._residency)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
         # rolling window of completed requests backing latency_summary();
@@ -172,6 +266,12 @@ class GenerationEngine:
         self.tokens_out = 0
         self.prefill_tokens = 0
         self.preemptions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        if preempt not in ("recompute", "swap"):
+            raise ValueError(f"unknown preempt strategy {preempt!r}")
+        self.preempt = preempt
+        self.host_store = host_store
 
         if self.backend == "paged":
             self.block_size = block_size
@@ -196,10 +296,20 @@ class GenerationEngine:
                 # TP-resident weights: resharding happens once at engine
                 # construction (deployment), never per step
                 self.params = pool_layout.place_params(cfg, self.params)
-            self.kv = kv if kv is not None else PagedKVCache(
-                cfg, n_blocks, block_size, self.max_blocks,
-                prefix_sharing=prefix_sharing, layout=pool_layout,
-            )
+            if kv is not None:
+                self.kv = kv
+                if self.host_store is None:
+                    self.host_store = kv.host_store  # DP group's shared tier
+            else:
+                if self.host_store is None and (host_blocks or preempt == "swap"):
+                    self.host_store = HostBlockStore.for_config(
+                        cfg, host_blocks or n_blocks, block_size
+                    )
+                self.kv = PagedKVCache(
+                    cfg, n_blocks, block_size, self.max_blocks,
+                    prefix_sharing=prefix_sharing, layout=pool_layout,
+                    host_store=self.host_store,
+                )
             # reserved scratch block: swallows masked padding/inactive-slot
             # writes and backs clamped gathers of unallocated table entries
             self._null_block = self.kv.pool.allocate(_NULL_SEQ, 1)[0]
@@ -260,9 +370,16 @@ class GenerationEngine:
         if self.backend == "paged":
             s["utilization"] = self.kv.utilization()
             s["prefix_hit_tokens"] = self.kv.shared_token_hits
+            s["host_hit_tokens"] = self.kv.host_token_hits
             s["free_blocks"] = self.kv.pool.n_free
             s["measured_hit_rate"] = self.measured_hit_rate()
+            s["measured_host_hit_rate"] = self.measured_host_hit_rate()
             s["tp_degree"] = self.pool_layout.tp_degree if self.pool_layout else 1
+            s["preempt"] = self.preempt
+            s["swap_outs"] = self.swap_outs
+            s["swap_ins"] = self.swap_ins
+            if self.host_store is not None:
+                s["host_store"] = self.host_store.stats()
         return s
 
     def audit_collectives(self, which: str = "fused") -> Dict[str, int]:
@@ -318,15 +435,48 @@ class GenerationEngine:
             raise ValueError(f"unknown audit target {which!r}")
         return count_collectives(lowered.compile())
 
-    def measured_hit_rate(self, window: int = 256) -> float:
+    # token-weighted windows below this many prompt tokens are "cold": right
+    # after engine start a single finished request would swing the measured
+    # rate to 0.0 or 1.0 and stampede the LP's alpha_scale feedback
+    hit_rate_min_tokens: int = 64
+    cold_start_hit_rate: float = 0.0  # documented cold-start default
+
+    def _measured_rate(self, hit_tokens, window: int,
+                       min_tokens: Optional[int],
+                       default: Optional[float]) -> float:
+        """Shared window + cold-start clamp for the per-tier measured rates:
+        when the window holds fewer than ``min_tokens`` prompt tokens
+        (including the empty window, and ``window=0``), the sample is too
+        small to trust — returns ``default`` when given (the Generator
+        passes its configured/calibrated static rate), else the engine's
+        ``cold_start_hit_rate``. ``hit_tokens`` extracts a finished request's
+        hit-token count for the tier being measured."""
+        done = [r for r in (self.finished[-window:] if window > 0 else [])
+                if r.prefill_cap > 0]
+        total = sum(r.prefill_cap for r in done)
+        lo = self.hit_rate_min_tokens if min_tokens is None else min_tokens
+        if total < max(lo, 1):
+            return self.cold_start_hit_rate if default is None else default
+        return sum(hit_tokens(r) for r in done) / total
+
+    def measured_hit_rate(self, window: int = 256,
+                          min_tokens: Optional[int] = None,
+                          default: Optional[float] = None) -> float:
         """Rolling token-weighted prefix hit rate over recently finished
         requests — the online signal the Generator cost model and the LP
-        allocator consume (instead of a static configured rate)."""
-        done = [r for r in self.finished[-window:] if r.prefill_cap > 0]
-        total = sum(r.prefill_cap for r in done)
-        if not total:
-            return 0.0
-        return sum(r.shared_prefix_tokens for r in done) / total
+        allocator consume (instead of a static configured rate), with the
+        ``_measured_rate`` cold-start clamp."""
+        return self._measured_rate(lambda r: r.shared_prefix_tokens,
+                                   window, min_tokens, default)
+
+    def measured_host_hit_rate(self, window: int = 256,
+                               min_tokens: Optional[int] = None,
+                               default: Optional[float] = None) -> float:
+        """Rolling token-weighted host-tier hit rate (prompt tokens promoted
+        from the host store), with the same cold-start clamp as
+        ``measured_hit_rate``."""
+        return self._measured_rate(lambda r: r.host_prefix_tokens,
+                                   window, min_tokens, default)
 
     def latency_summary(self) -> Dict[str, float]:
         """TTFT/TPOT/e2e percentiles (seconds) over finished requests — the
@@ -358,7 +508,38 @@ class GenerationEngine:
             out["prefix_hit_rate_p50"] = float(
                 np.percentile([r.prefix_hit_rate for r in capped], 50)
             )
+            out["host_hit_rate"] = float(
+                sum(r.host_prefix_tokens for r in capped)
+                / sum(r.prefill_cap for r in capped)
+            )
         return out
+
+    def _residency(self, req: Request) -> float:
+        """Eviction-aware admission signal: fraction of a waiting request's
+        prompt whose keyed blocks are resident — HBM-indexed blocks weigh
+        1.0, host-tier blocks 0.5 (a promotion still costs a copy). Bound
+        into the queue policy (``resident_first`` orders by it); the probe
+        layout is computed once per request and cached (content is fixed,
+        residency lookups stay live)."""
+        if self.backend != "paged" or not self.kv.prefix_sharing:
+            return 0.0
+        lay = req.layout if req.layout is not None else req.probe_layout
+        if lay is None:
+            lay = build_layout(
+                req.segprompt if req.segprompt is not None else req.prompt,
+                self.block_size, self._prompt_cap(req),
+            )
+            req.probe_layout = lay
+        host = self.kv.host_store
+        tok = 0.0
+        for key in lay.block_keys:
+            if key is None:
+                continue
+            if key in self.kv._prefix_index:
+                tok += self.block_size
+            elif host is not None and host.contains(key):
+                tok += 0.5 * self.block_size
+        return tok / max(lay.n_tokens, 1)
 
     # ------------------------------------------------------------ admission
     def _prompt_cap(self, req: Request) -> int:
@@ -370,6 +551,8 @@ class GenerationEngine:
     def _try_admit(self, req: Request) -> bool:
         if self.backend != "paged":
             return True  # dense: a free slot is the only admission resource
+        if req.swapped:
+            return self._swap_in(req)
         cap = self._prompt_cap(req)
         # fit check against blocks THIS engine may allocate (a DP replica owns
         # a block range of the shared pool); -1 for the reserved scratch block
@@ -389,32 +572,70 @@ class GenerationEngine:
         if adm is None:
             return False  # backpressure: stays queued until blocks free up
         req.layout = layout
-        req.shared_spans = adm.shared_spans
+        req.shared_spans = normalize_spans(adm.shared_spans)
         req.shared_prefix_tokens = adm.n_shared
+        req.host_prefix_tokens = adm.n_host
         return True
 
-    def _advance_cursor(self, req: Request):
-        """Skip the prefill cursor over cache-served spans: shared blocks
-        already hold the K/V, so the cursor jumps to the next slot needing
-        compute (fully-cached documents cost zero prefill steps)."""
-        moved = True
-        while moved:
-            moved = False
-            for s, e in req.shared_spans:
-                if s <= req.prefill_pos < e:
-                    req.prefill_pos = e
-                    moved = True
-        req.prefill_pos = min(req.prefill_pos, req.prefill_cap)
+    # ----------------------------------------------------- swap preemption
+    def _swap_tag(self, req: Request):
+        """Store tag for a request's swap set. Namespaced by the cache's
+        client tag: DP replicas number req_ids independently AND share one
+        host store, so a bare req_id would collide across replicas."""
+        return (self.kv.client_tag, req.req_id)
 
-    def _max_grant(self, req: Request, limit: int) -> int:
-        """Largest prefill chunk startable at the cursor: clipped by the
-        chunk size, the prompt end, and the next shared span (shared blocks
-        are immutable — a chunk must never write into them)."""
-        c = min(limit, req.prefill_cap - req.prefill_pos)
-        for s, _e in req.shared_spans:
-            if s > req.prefill_pos:
-                c = min(c, s - req.prefill_pos)
-        return max(c, 0)
+    def _swap_out(self, victim: Request) -> bool:
+        """Park a victim's block chain in the host tier: one batched
+        device->host gather of its table's blocks, then the usual
+        release/re-queue. Returns False when the chain cannot be pinned (no
+        host store, or its unpinned capacity is exhausted) — the caller
+        falls back to recompute preemption.
+
+        Known trade-off: refcount-shared prefix blocks are COPIED into the
+        swap set and restored as private duplicates, so swap-in can need
+        more fresh blocks than recompute re-admission (which would re-share
+        still-indexed blocks). Re-sharing at swap-in would have to survive
+        the shared block being evicted while the victim is parked, i.e. it
+        still needs the saved contents as the fallback — copying keeps the
+        restore unconditionally exact at the cost of those extra blocks."""
+        blocks = list(self.kv.pool.tables.get(victim.req_id, []))
+        if self.host_store is None or not blocks:
+            return False
+        ids = jnp.asarray(np.asarray(blocks, np.int32))
+        k_np = np.asarray(jnp.take(self.kv.k, ids, axis=1))
+        v_np = np.asarray(jnp.take(self.kv.v, ids, axis=1))
+        if not self.host_store.save_seq(self._swap_tag(victim), k_np, v_np):
+            return False
+        victim.swap_len = self.kv.lengths.get(victim.req_id, victim.pos)
+        victim.swapped = True
+        self.kv.release(victim.req_id)
+        if victim.slot >= 0 and self.slots[victim.slot] is victim:
+            self.slots[victim.slot] = None
+        victim.slot = -1
+        self.waiting.insert(0, victim)
+        self.preemptions += 1
+        self.swap_outs += 1
+        return True
+
+    def _swap_in(self, req: Request) -> bool:
+        """Restore a swapped-out request: allocate a fresh chain of the same
+        length, scatter the parked contents back (one batched host->device
+        write), and resume the cursor/position state exactly where swap-out
+        left it — no prefill is repaid. All-or-nothing: on backpressure the
+        swap set stays pinned and the request stays queued."""
+        tag = self._swap_tag(req)
+        n = self.host_store.saved_blocks(tag)
+        if n > self.kv.pool.n_free:
+            return False  # backpressure: blocks not yet available
+        blocks = self.kv.pool.allocate(req.req_id, n * self.block_size)
+        k_np, v_np = self.host_store.restore_seq(tag)
+        ids = jnp.asarray(np.asarray(blocks, np.int32))
+        self.kv.k = self.kv.k.at[:, ids].set(jnp.asarray(k_np))
+        self.kv.v = self.kv.v.at[:, ids].set(jnp.asarray(v_np))
+        self.kv.lengths[req.req_id] = req.swap_len
+        req.swapped = False
+        self.swap_ins += 1
+        return True
 
     # ------------------------------------------------------------ internals
     def _decode_fn(self, params, cache, tokens, pos):
@@ -519,11 +740,11 @@ class GenerationEngine:
         )
         req.prefill_cap = cap
         req.prefill_pos = 0
-        self._advance_cursor(req)  # shared blocks already carry their K/V
+        _advance_cursor(req)  # shared blocks already carry their K/V
         last = None
         while req.prefill_pos < cap:
             pos = req.prefill_pos
-            C = self._max_grant(req, pc)
+            C = _max_grant(req, pc)
             chunk = np.zeros((1, pc), np.int32)
             chunk[0, :C] = toks[pos : pos + C]
             positions, p_end, s_start = self._seg_arrays(req, pos, C, pc)
@@ -534,7 +755,7 @@ class GenerationEngine:
             )
             req.prefill_pos = pos + C
             self.prefill_tokens += C
-            self._advance_cursor(req)
+            _advance_cursor(req)
         self.kv.lengths[req.req_id] = cap
         self.kv.register_prefix(req.req_id, toks, req.layout)
         req.slot = slot
@@ -545,10 +766,19 @@ class GenerationEngine:
         self._emit(req, tok)
 
     def _preempt(self, victim: Request):
-        """Release a request's blocks and re-queue its continuation (prompt +
-        generated tokens); re-admission re-prefills, reusing any of its own
-        prefix blocks that survived in the warm cache. A mid-prefill victim
+        """Apply the engine's preemption strategy to ``victim``.
+
+        ``swap``: park the block chain in the host tier and re-queue with all
+        cursor state intact (``_swap_out``; falls back to recompute when the
+        store cannot pin the chain).
+
+        ``recompute``: release the blocks and re-queue the continuation
+        (prompt + generated tokens); re-admission re-prefills, reusing any of
+        its own prefix blocks that survived in the warm cache (or, with a
+        host store attached, were demoted to it). A mid-prefill victim
         restarts its cursor from scratch (its partial K/V is discarded)."""
+        if self.preempt == "swap" and self._swap_out(victim):
+            return
         self.kv.release(victim.req_id)
         if victim.slot >= 0 and self.slots[victim.slot] is victim:
             self.slots[victim.slot] = None
@@ -560,8 +790,10 @@ class GenerationEngine:
              np.asarray(victim.out_tokens, np.int32)]
         )
         victim.shared_prefix_tokens = 0
+        victim.host_prefix_tokens = 0
         victim.shared_spans = []
         victim.layout = None
+        victim.probe_layout = None  # continuation content changed
         victim.prefill_pos = 0
         victim.prefill_cap = 0
         self.waiting.insert(0, victim)
@@ -632,6 +864,7 @@ class GenerationEngine:
             while self.slots[slot] is None and self.waiting and not blocked:
                 i = self.scheduler.select(self.waiting)
                 req = self.waiting[i]
+                was_swapped = req.swapped  # _try_admit clears it on restore
                 if not self._try_admit(req):
                     if req.done:  # unfittable request failed out; try the next
                         self.waiting.pop(i)
@@ -640,7 +873,11 @@ class GenerationEngine:
                     break
                 self.waiting.pop(i)
                 self.slots[slot] = req
-                if self.backend == "paged":
+                if was_swapped:
+                    # restored in place: KV, position and cursor resume as
+                    # they were (sequential victims are always decode-phase)
+                    req.slot = slot
+                elif self.backend == "paged":
                     self._prefill_paged(req, slot)
                 else:
                     self._prefill_one(req, slot)
@@ -672,7 +909,7 @@ class GenerationEngine:
         for r in self.scheduler.order(prefill_rows):
             if budget <= 0:
                 break
-            c = min(self._max_grant(r, self.prefill_chunk_size), budget)
+            c = min(_max_grant(r, self.prefill_chunk_size), budget)
             grants[r.req_id] = c
             budget -= c
 
@@ -726,7 +963,7 @@ class GenerationEngine:
                 continue  # no budget this step; cursor holds
             r.prefill_pos += c
             self.prefill_tokens += c
-            self._advance_cursor(r)  # skip cache-served spans for free
+            _advance_cursor(r)  # skip cache-served spans for free
             self.kv.lengths[r.req_id] = r.prefill_pos
             if r.prefill_pos >= r.prefill_cap:
                 # prefill complete: publish prompt blocks, sample first token
@@ -748,8 +985,9 @@ class GenerationEngine:
         while free and self.waiting:
             i = self.scheduler.select(self.waiting)
             req = self.waiting[i]
-            if self._prefix_pending(req):
+            if not req.swapped and self._prefix_pending(req):
                 break  # leader still prefilling this prefix; wait to share it
+            was_swapped = req.swapped  # _try_admit clears it on restore
             if not self._try_admit(req):
                 if req.done:  # unfittable request failed out; try the next
                     self.waiting.pop(i)
@@ -757,11 +995,14 @@ class GenerationEngine:
                 break  # the policy's head-of-line waits for blocks
             self.waiting.pop(i)
             slot = free.pop(0)
-            cap = self._prompt_cap(req)
-            req.truncated = cap < len(req.prompt)
-            req.prefill_cap = cap
-            req.prefill_pos = 0
-            self._advance_cursor(req)  # shared blocks already carry their K/V
+            if not was_swapped:
+                cap = self._prompt_cap(req)
+                req.truncated = cap < len(req.prompt)
+                req.prefill_cap = cap
+                req.prefill_pos = 0
+                _advance_cursor(req)  # shared blocks already carry their K/V
+            # a swap-restored request keeps its cursor/position state: it
+            # resumes mid-prefill or mid-decode exactly where swap-out left it
             req.slot = slot
             self.slots[slot] = req
 
@@ -868,8 +1109,14 @@ class DataParallelEngineGroup:
     All replicas share one ``PoolArrays`` box (and one params tree), so on a
     ("data", "model") mesh the arrays shard blocks over "data" and KV heads
     over "model" and each replica's blocks are its data-shard. Replicas do
-    NOT share prefix blocks (each index only points into its own range);
-    cross-replica sharing is the ROADMAP "distributed block store" item.
+    NOT share HBM prefix blocks (each index only points into its own range),
+    but a shared ``HostBlockStore`` (``host_store=`` / ``host_blocks=``)
+    gives them the next-best thing: every replica write-throughs its newly
+    published prefix blocks to the host tier, so a document prefilled on
+    replica 0 is a *host hit* on replica 1 — one host->device block copy
+    instead of a re-prefill, off the admission hot path. Content-hash keys
+    make the sharing exact, and the store's ``cross_hits`` counter makes it
+    observable (``stats()["cross_replica_host_hits"]``).
 
     ``submit`` routes least-loaded (fewest active + queued requests);
     ``step`` advances every replica once. Greedy outputs are identical to a
@@ -884,13 +1131,20 @@ class DataParallelEngineGroup:
     def __init__(self, cfg, dp: int = 2, max_batch: int = 4, max_seq: int = 256,
                  block_size: int = 16, n_blocks_per_replica: Optional[int] = None,
                  prefix_sharing: bool = True, pool_layout: Optional[ShardedPoolLayout] = None,
-                 seed: int = 0, **engine_kwargs):
+                 seed: int = 0, host_store: Optional[HostBlockStore] = None,
+                 host_blocks: Optional[int] = None, **engine_kwargs):
         if dp < 1:
             raise ValueError("dp must be >= 1")
         max_blocks = -(-max_seq // block_size)
         per = n_blocks_per_replica or (max_batch * (max_blocks + 1) + 1)
         total = per * dp
         self.pool_layout = pool_layout
+        if host_store is None and (host_blocks
+                                   or engine_kwargs.get("preempt") == "swap"):
+            host_store = HostBlockStore.for_config(
+                cfg, host_blocks or total, block_size
+            )
+        self.host_store = host_store
         self.engines: List[GenerationEngine] = []
         arrays: Optional[PoolArrays] = None
         params = None
@@ -899,6 +1153,10 @@ class DataParallelEngineGroup:
             kv = PagedKVCache(
                 cfg, total, block_size, max_blocks, prefix_sharing=prefix_sharing,
                 layout=pool_layout, block_range=(lo, hi), arrays=arrays,
+                host_store=host_store, client_tag=rank,
+                # write-through: siblings should host-hit a doc without
+                # waiting for the producing replica to evict it from HBM
+                host_write_through=host_store is not None,
             )
             eng = GenerationEngine(
                 cfg, params=params, max_batch=max_batch, max_seq=max_seq,
@@ -931,13 +1189,18 @@ class DataParallelEngineGroup:
 
     def stats(self) -> Dict[str, Any]:
         per = [e.stats() for e in self.engines]
-        return {
+        out = {
             "dp_degree": len(self.engines),
             "tokens_out": sum(s["tokens_out"] for s in per),
             "prefill_tokens": sum(s["prefill_tokens"] for s in per),
             "preemptions": sum(s["preemptions"] for s in per),
+            "host_hit_tokens": sum(s.get("host_hit_tokens", 0) for s in per),
             "replicas": per,
         }
+        if self.host_store is not None:
+            out["cross_replica_host_hits"] = self.host_store.cross_hits
+            out["host_store"] = self.host_store.stats()
+        return out
 
 
 def _shareable_doc_heads(segprompt, block_size: int) -> set:

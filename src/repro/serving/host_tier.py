@@ -1,0 +1,228 @@
+"""Host-memory KV block tier: the level beneath the device block pools.
+
+RAGDoll (arXiv:2504.15302) makes the case that host memory is the pressure-
+relief valve RAG serving needs: retrieved-document KV state is large, bursty,
+and highly reusable, so evicting it to *recompute* wastes exactly the prefill
+the cache existed to avoid. The ``HostBlockStore`` is a pinned numpy mirror of
+the device pools (same ``(G, block, block_size, KVH, hd)`` block geometry,
+same segment-scoped prefix keys as ``serving.paged_cache``) serving three
+roles:
+
+* **Demotion target for the warm-cache LRU.** When the device pool reclaims a
+  warm (refcount-0 but prefix-indexed) block, its contents demote to host
+  instead of vanishing (``PagedKVCache._forget_block``); a later request whose
+  key misses HBM but hits here gets a *second-chance* promotion — one
+  host→device block copy instead of re-running the document's prefill.
+
+* **Swap-out preemption staging.** The engine's ``preempt="swap"`` strategy
+  parks a victim's entire block chain here (one batched device→host gather)
+  and restores it verbatim on re-admission — greedy-token-identical to
+  ``preempt="recompute"`` but without repaying the prefill. Swap sets are
+  *pinned*: keyed cache blocks may be evicted to make room, swap sets never
+  are (``restore_seq``/``drop_seq`` are the only exits).
+
+* **Cross-replica doc-block sharing.** Keys are content hashes, identical
+  across processes and replicas, so one store shared by a
+  ``DataParallelEngineGroup`` lets a document prefilled on replica 0 be a
+  host-hit on replica 1 — the ROADMAP's "distributed block store" in its
+  single-host form. ``put``/``read`` carry an ``owner`` tag so cross-replica
+  hits are observable (``cross_hits``).
+
+Everything here is plain host-side numpy + dict bookkeeping: no jax imports,
+no device state, single-threaded like the rest of the allocator layer. The
+device-side copies (gather on demote/swap-out, scatter on promote/swap-in)
+live with the callers in ``serving.paged_cache`` / ``serving.engine``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class HostBlockStore:
+    """Fixed-capacity host block slab with a keyed LRU region and pinned
+    swap sets.
+
+    Invariants (the host-tier analogue of the device pool's accounting):
+
+    * every slot is exactly one of: free, keyed (in ``_by_key``/``_lru``), or
+      pinned in a swap set — ``len(free) + len(_by_key) + n_swapped ==
+      n_blocks`` at all times;
+    * keyed slots form an LRU (insertion-ordered dict; hits re-heat): they are
+      evictable, oldest first, when capacity is needed;
+    * swap sets are never evicted; ``save_seq`` is all-or-nothing (it either
+      pins the whole chain or leaves the store unchanged, modulo keyed
+      evictions it performed to try to make room);
+    * "refcount-clean after drain": once every engine drains,
+      ``n_swapped == 0`` — a swap set always ends in ``restore_seq`` or
+      ``drop_seq``.
+    """
+
+    def __init__(self, block_shape: Tuple[int, int, int, int], dtype,
+                 n_blocks: int = 256):
+        G, bs, KVH, hd = block_shape
+        self.n_blocks = n_blocks
+        self.block_size = bs
+        self.k = np.zeros((G, n_blocks, bs, KVH, hd), dtype)
+        self.v = np.zeros_like(self.k)
+        self.free: List[int] = list(range(n_blocks))
+        self._by_key: Dict[bytes, int] = {}     # prefix key -> slot
+        self._key_of: Dict[int, bytes] = {}     # reverse map
+        self._lru: Dict[bytes, None] = {}       # keyed slots, eviction order
+        self._producer: Dict[bytes, Any] = {}   # key -> owner tag that demoted it
+        self._swap: Dict[Any, List[int]] = {}   # swap tag -> pinned slots
+        # counters (stats() exposes them; benchmarks/tests consume)
+        self.puts = 0
+        self.hits = 0
+        self.cross_hits = 0   # promotions whose producer was a different owner
+        self.evictions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+
+    @classmethod
+    def for_config(cls, cfg, n_blocks: int, block_size: int) -> "HostBlockStore":
+        """Mirror the device pool geometry of ``PagedKVCache`` for ``cfg``."""
+        import jax.numpy as jnp
+
+        from repro.models import transformer as tfm
+
+        G = cfg.num_layers // tfm.period(cfg)
+        dtype = jnp.dtype(cfg.dtype)  # ml_dtypes-backed numpy dtype (bf16 ok)
+        return cls((G, block_size, cfg.num_kv_heads, cfg.head_dim), dtype,
+                   n_blocks=n_blocks)
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def n_swapped(self) -> int:
+        return sum(len(s) for s in self._swap.values())
+
+    @property
+    def n_keyed(self) -> int:
+        return len(self._by_key)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / max(self.n_blocks, 1)
+
+    def _evict_one(self) -> Optional[int]:
+        """Reclaim the least-recently-used keyed slot (swap sets are pinned)."""
+        if not self._lru:
+            return None
+        key = next(iter(self._lru))
+        del self._lru[key]
+        slot = self._by_key.pop(key)
+        del self._key_of[slot]
+        self._producer.pop(key, None)
+        self.evictions += 1
+        return slot
+
+    def _take_slot(self) -> Optional[int]:
+        if self.free:
+            return self.free.pop()
+        return self._evict_one()
+
+    def _touch(self, key: bytes) -> None:
+        if key in self._lru:
+            del self._lru[key]
+            self._lru[key] = None  # move to the MRU end, O(1)
+
+    def touch(self, key: bytes) -> None:
+        """Public re-heat: callers that are about to promote (or just decided
+        NOT to re-copy an already-resident key) move it to the MRU end so
+        intervening evictions take colder keys first."""
+        self._touch(key)
+
+    # ------------------------------------------------------ keyed (cache) API
+    def contains(self, key: bytes) -> bool:
+        return key in self._by_key
+
+    def put(self, key: bytes, k_block: np.ndarray, v_block: np.ndarray,
+            owner: Any = None) -> bool:
+        """Demote one block's contents under ``key`` (device eviction path).
+
+        A key already resident is only re-heated (contents are immutable by
+        the keying contract — equal key means bit-identical KV). Returns False
+        when neither a free nor an evictable slot exists (the store is all
+        pinned swap sets)."""
+        if key in self._by_key:
+            self._touch(key)
+            return True
+        slot = self._take_slot()
+        if slot is None:
+            return False
+        self.k[:, slot] = k_block
+        self.v[:, slot] = v_block
+        self._by_key[key] = slot
+        self._key_of[slot] = key
+        self._lru[key] = None
+        self._producer[key] = owner
+        self.puts += 1
+        return True
+
+    def read(self, keys: Sequence[bytes], owner: Any = None):
+        """Batched promotion read: ``(k, v)`` stacked ``(G, len(keys), bs,
+        KVH, hd)`` copies, in key order. Records hits (and cross-replica hits
+        when the producer tag differs from ``owner``) and re-heats every key.
+        Every key must be resident (callers gate on ``contains``)."""
+        slots = [self._by_key[k] for k in keys]
+        for key in keys:
+            self._touch(key)
+            self.hits += 1
+            producer = self._producer.get(key)
+            if owner is not None and producer is not None and producer != owner:
+                self.cross_hits += 1
+        return self.k[:, slots].copy(), self.v[:, slots].copy()
+
+    # ------------------------------------------------------------- swap API
+    def save_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray) -> bool:
+        """Pin a preempted sequence's block chain (``(G, n, bs, KVH, hd)``)
+        under ``tag``. All-or-nothing: returns False (store unchanged apart
+        from any keyed evictions attempted for room) when the chain cannot be
+        pinned — callers fall back to recompute preemption."""
+        if tag in self._swap:
+            raise ValueError(f"swap tag {tag!r} already saved")
+        n = int(k_blocks.shape[1])
+        if n == 0 or n > len(self.free) + len(self._lru):
+            return False
+        slots = []
+        for _ in range(n):
+            s = self._take_slot()
+            assert s is not None  # capacity checked above
+            slots.append(s)
+        self.k[:, slots] = k_blocks
+        self.v[:, slots] = v_blocks
+        self._swap[tag] = slots
+        self.swap_outs += 1
+        return True
+
+    def saved_blocks(self, tag: Any) -> int:
+        return len(self._swap.get(tag, ()))
+
+    def restore_seq(self, tag: Any):
+        """Unpin and return a swap set's ``(k, v)`` block chain copies."""
+        slots = self._swap.pop(tag)
+        k, v = self.k[:, slots].copy(), self.v[:, slots].copy()
+        self.free.extend(slots)
+        self.swap_ins += 1
+        return k, v
+
+    def drop_seq(self, tag: Any) -> None:
+        """Abandon a swap set without restoring (victim fell back to
+        recompute or was cancelled)."""
+        self.free.extend(self._swap.pop(tag, []))
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_blocks": self.n_blocks,
+            "n_free": len(self.free),
+            "n_keyed": self.n_keyed,
+            "n_swapped": self.n_swapped,
+            "puts": self.puts,
+            "hits": self.hits,
+            "cross_hits": self.cross_hits,
+            "evictions": self.evictions,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "utilization": self.utilization(),
+        }

@@ -26,6 +26,13 @@ between hits become prefill compute spans), and releases keep refcount-0
 blocks warm in an LRU eviction queue (prefix-index hits re-heat a block even
 when the hitting request backpressures).
 
+Beneath the device pool sits an optional host-memory tier
+(``serving.host_tier.HostBlockStore``): warm blocks evicted from HBM demote
+their contents to host, and admission promotes host-resident keyed blocks
+back — a second-chance hit class between an HBM hit and a full prefill miss
+(``Admission.n_host``). The store may be shared across DP replicas, making a
+document prefilled on one replica a host-hit on another.
+
 Pool layout per layer-kind group (matching models.model.init_cache):
     k/v: (G, n_blocks, block_size, KVH, hd)
 Block tables: (max_seqs, max_blocks_per_seq) int32, -1 = unallocated
@@ -62,7 +69,10 @@ class PagedPool:
     free_list: List[int] = field(default_factory=list)
     tables: Dict[int, List[int]] = field(default_factory=dict)  # seq -> blocks
     refcounts: Dict[int, int] = field(default_factory=dict)     # block -> refs
-    cached: List[int] = field(default_factory=list)             # warm, LRU order
+    # warm blocks in LRU order: an insertion-ordered dict keyed by block id
+    # (values unused), so membership, revive and re-heat are all O(1) — the
+    # historical list needed O(n) ``remove``/``pop(0)`` on the hot path
+    cached: Dict[int, None] = field(default_factory=dict)
     on_free: Optional[Callable[[int], None]] = None             # block truly freed
     keep_on_release: Optional[Callable[[int], bool]] = None     # warm-cache policy
     n_owned: int = 0     # blocks this allocator may hand out (DP block range)
@@ -88,7 +98,10 @@ class PagedPool:
     def _pop_block(self) -> int:
         if self.free_list:
             return self.free_list.pop()
-        b = self.cached.pop(0)  # evict least-recently-used warm block
+        if not self.cached:
+            raise MemoryError("paged pool exhausted: no free or warm block")
+        b = next(iter(self.cached))  # evict least-recently-used warm block
+        del self.cached[b]
         if self.on_free is not None:
             self.on_free(b)
         return b
@@ -97,10 +110,10 @@ class PagedPool:
         """LRU heat signal: a prefix-index hit moves a warm block to the back
         of the eviction queue even when the hitting request cannot be admitted
         yet (backpressure) — a hot shared prefix must outlive cold one-off
-        blocks released after it."""
+        blocks released after it. O(1)."""
         if self.refcounts.get(block_id, 0) == 0 and block_id in self.cached:
-            self.cached.remove(block_id)
-            self.cached.append(block_id)
+            del self.cached[block_id]
+            self.cached[block_id] = None  # re-insert at the MRU end
 
     def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
         need = self.blocks_needed(n_tokens)
@@ -118,9 +131,9 @@ class PagedPool:
         """Append an already-written block to ``seq_id``'s table, bumping its
         refcount (copy-on-nothing prefix sharing: only fully written, immutable
         prompt blocks are ever shared). Reviving a warm cached block removes it
-        from the eviction list."""
-        if self.refcounts.get(block_id, 0) == 0 and block_id in self.cached:
-            self.cached.remove(block_id)
+        from the eviction queue (O(1))."""
+        if self.refcounts.get(block_id, 0) == 0:
+            self.cached.pop(block_id, None)
         self.refcounts[block_id] = self.refcounts.get(block_id, 0) + 1
         self.tables.setdefault(seq_id, []).append(block_id)
         return block_id
@@ -142,7 +155,7 @@ class PagedPool:
             if self.refcounts[b] <= 0:
                 del self.refcounts[b]
                 if self.keep_on_release is not None and self.keep_on_release(b):
-                    self.cached.append(b)  # stays warm for prefix reuse
+                    self.cached[b] = None  # stays warm for prefix reuse
                 else:
                     self.free_list.append(b)
                     if self.on_free is not None:
@@ -305,10 +318,16 @@ def prefix_block_keys(tokens, block_size: int) -> List[bytes]:
 
 @dataclass
 class Admission:
-    """Result of admission-controlled allocation for a prompt."""
+    """Result of admission-controlled allocation for a prompt.
 
-    n_shared: int                       # prompt tokens served from shared blocks
+    ``shared_spans`` covers BOTH hit classes — HBM-shared blocks and blocks
+    promoted from the host tier hold exact KV either way, so the prefill
+    cursor may skip all of them; ``n_shared``/``n_host`` split the token
+    counts per tier for the telemetry/cost-model feedback paths."""
+
+    n_shared: int                       # prompt tokens served from HBM-shared blocks
     shared_spans: List[Tuple[int, int]]  # token ranges prefill may skip
+    n_host: int = 0                     # prompt tokens promoted from the host tier
 
 
 class PoolArrays:
@@ -357,7 +376,16 @@ class PagedKVCache:
     def __init__(self, cfg, n_blocks: int = 256, block_size: int = 16,
                  max_blocks_per_seq: int = 64, prefix_sharing: bool = True,
                  layout=None, block_range: Optional[Tuple[int, int]] = None,
-                 arrays: Optional[PoolArrays] = None):
+                 arrays: Optional[PoolArrays] = None, host_store=None,
+                 host_write_through: bool = False, client_tag=None):
+        """``host_store`` (serving.host_tier.HostBlockStore) attaches the
+        host-memory tier: warm blocks evicted from HBM demote their contents
+        there, and ``admit_tokens`` promotes host-resident keys back as a
+        second-chance hit class. ``host_write_through`` additionally copies
+        every newly published prefix block to host at ``register_prefix``
+        time — the DP-group setting, so replicas share doc blocks without
+        waiting for an eviction. ``client_tag`` identifies this cache to the
+        (possibly shared) store for cross-replica hit accounting."""
         from repro.models import transformer as tfm
 
         self.cfg = cfg
@@ -387,9 +415,13 @@ class PagedKVCache:
         self._arrays = arrays
         self.lengths: Dict[int, int] = {}
         self.prefix_sharing = prefix_sharing
+        self.host_store = host_store
+        self.host_write_through = host_write_through
+        self.client_tag = client_tag if client_tag is not None else id(self)
         self._prefix_index: Dict[bytes, int] = {}   # chain hash -> block id
         self._block_key: Dict[int, bytes] = {}      # reverse map for eviction
         self.shared_token_hits = 0                  # prompt tokens served from shared blocks
+        self.host_token_hits = 0                    # prompt tokens promoted from host
 
     # k/v proxy the shared PoolArrays box: DP replicas see each other's
     # functional updates; the single-engine case is a plain attribute pair
@@ -414,6 +446,20 @@ class PagedKVCache:
         key = self._block_key.pop(block_id, None)
         if key is not None and self._prefix_index.get(key) == block_id:
             del self._prefix_index[key]
+            if self.host_store is not None:
+                # demotion: the block is being reclaimed but its contents are
+                # still intact (the new owner writes later) — mirror them to
+                # the host tier so the key stays promotable instead of dying
+                # with the HBM block. Already-resident keys (write-through
+                # configs) only re-heat: don't pay the two device->host
+                # copies just for put() to discard them.
+                if self.host_store.contains(key):
+                    self.host_store.touch(key)
+                else:
+                    self.host_store.put(
+                        key, np.asarray(self.k[:, block_id]),
+                        np.asarray(self.v[:, block_id]), owner=self.client_tag,
+                    )
 
     def _block_hits(self, tokens, layout) -> Dict[int, int]:
         """Block ordinal -> cached block id, for every keyed block already in
@@ -434,6 +480,42 @@ class PagedKVCache:
                 self.pool.touch(b)
         return hits
 
+    def _host_block_hits(self, n_tokens: int, layout,
+                         hbm_hits: Dict[int, int]) -> Dict[int, bytes]:
+        """Block ordinal -> prefix key for every keyed block that misses the
+        HBM index but is resident in the host tier (the second-chance hit
+        class). Same exclusions as ``_block_hits``: the final prompt token's
+        block always runs through the model."""
+        if (self.host_store is None or not self.prefix_sharing
+                or not n_tokens):
+            return {}
+        last_block = (n_tokens - 1) // self.block_size
+        out: Dict[int, bytes] = {}
+        for ordinal, key in enumerate(layout.block_keys):
+            if key is None or ordinal == last_block or ordinal in hbm_hits:
+                continue
+            if self.host_store.contains(key):
+                out[ordinal] = key
+                # re-heat now: allocation below may demote evicted HBM blocks
+                # into the store, and its LRU must take colder keys before a
+                # key we are about to promote
+                self.host_store.touch(key)
+        return out
+
+    def _promote_host_blocks(self, promote: List[Tuple[int, bytes]]):
+        """Copy host-resident blocks into freshly allocated device blocks
+        (one batched host->device scatter) and publish their keys in the HBM
+        index, so the next request with the same document HBM-hits."""
+        keys = [key for _, key in promote]
+        k_np, v_np = self.host_store.read(keys, owner=self.client_tag)
+        ids = jnp.asarray(np.asarray([b for b, _ in promote], np.int32))
+        self.k = self.k.at[:, ids].set(jnp.asarray(k_np))
+        self.v = self.v.at[:, ids].set(jnp.asarray(v_np))
+        for b, key in promote:
+            if key not in self._prefix_index:  # first writer wins, as ever
+                self._prefix_index[key] = b
+                self._block_key[b] = key
+
     def admit_tokens(self, seq_id: int, tokens, layout=None) -> Optional[Admission]:
         """Admission-controlled allocation for a prompt. Reuses every cached
         keyed block (+1 slack block for decode), and returns the admission
@@ -444,21 +526,29 @@ class PagedKVCache:
 
         Invariants (each has a dedicated regression test):
 
-        * **all-or-nothing**: on backpressure (None) NOTHING was allocated or
-          shared — free-block count, refcounts and ``tables[seq_id]`` are
-          untouched, so a deferred request retries with no cleanup. Headroom
-          accounting counts new blocks AND warm revivals (a shared warm block
-          leaves the LRU queue and consumes ``n_free``).
+        * **all-or-nothing**: on backpressure (None) NOTHING was allocated,
+          shared or promoted — free-block count, refcounts, ``tables[seq_id]``
+          and the host tier are untouched, so a deferred request retries with
+          no cleanup. Headroom accounting counts new blocks AND warm revivals
+          (a shared warm block leaves the LRU queue and consumes ``n_free``);
+          revivals are counted by UNIQUE block id — two segments hashing to
+          the same block revive it once, and double-counting it used to make
+          admission spuriously reject at exact-fit capacity (regression-
+          tested in tests/test_host_tier.py).
         * on success, ``tables[seq_id]`` holds exactly
           ``blocks_needed(len(tokens)) + 1`` entries in prompt-block order
           (the +1 is the decode slack block), shared hits refcount-bumped in
-          place, misses freshly allocated with refcount 1.
+          place, misses freshly allocated with refcount 1. Host-tier hits are
+          misses for allocation purposes (they consume a fresh block) but
+          their KV is copied in from the host store, their key is published
+          in the HBM index, and their tokens count as cache-served.
         * the block containing the FINAL prompt token is never served from
           cache: at least one prompt token must run through the model to
           produce the first-sample logits (``_block_hits`` skips it).
         * ``Admission.shared_spans`` are disjoint, sorted, block-aligned
-          token ranges; ``n_shared == sum(hi - lo for lo, hi in spans)``, and
-          the engine's prefill cursor may skip exactly these ranges.
+          token ranges covering BOTH hit tiers; ``n_shared + n_host ==
+          sum(hi - lo for lo, hi in spans)``, and the engine's prefill cursor
+          may skip exactly these ranges.
         * hits touch warm blocks (LRU re-heat) even if the caller then
           backpressures — a hot shared prefix must outlive cold blocks.
         """
@@ -470,30 +560,48 @@ class PagedKVCache:
         bs = self.block_size
         n_blocks = self.pool.blocks_needed(Lp)
         hits = self._block_hits(tokens, layout)
+        host_hits = self._host_block_hits(Lp, layout, hits)
         # new blocks (misses + 1 decode slack) plus warm revivals both consume
         # n_free headroom — count them, or allocation below can raise instead
-        # of backpressuring
+        # of backpressuring. Revivals count per unique block id: the first
+        # share of a warm block consumes it from the LRU queue, further
+        # shares of the same block only bump its refcount.
         n_new = n_blocks - len(hits) + 1
-        n_warm = sum(1 for b in hits.values() if self.pool.refcounts.get(b, 0) == 0)
+        n_warm = sum(
+            1 for b in set(hits.values()) if self.pool.refcounts.get(b, 0) == 0
+        )
         if n_new + n_warm > self.pool.n_free:
             return None
+        promote: List[Tuple[int, int, bytes]] = []  # (ordinal, block, key)
         for ordinal in range(n_blocks):
             if ordinal in hits:
                 self.pool.share(seq_id, hits[ordinal])
             else:
-                self.pool.allocate(seq_id, 1)
+                b = self.pool.allocate(seq_id, 1)[0]
+                if ordinal in host_hits:
+                    promote.append((ordinal, b, host_hits[ordinal]))
         self.pool.allocate(seq_id, 1)  # decode slack block
+        # allocation above may have demoted evicted HBM blocks into the host
+        # store, whose own LRU can (despite the re-heat in _host_block_hits)
+        # drop a pending-promote key under extreme pressure — such ordinals
+        # degrade to ordinary misses (their fresh block prefills normally)
+        promote = [(o, b, k) for o, b, k in promote
+                   if self.host_store.contains(k)]
+        if promote:
+            self._promote_host_blocks([(b, k) for _o, b, k in promote])
         n_shared = len(hits) * bs
+        n_host = len(promote) * bs
         self.lengths[seq_id] = 0
         self.shared_token_hits += n_shared
+        self.host_token_hits += n_host
         spans: List[Tuple[int, int]] = []
-        for ordinal in sorted(hits):
+        for ordinal in sorted(set(hits) | {o for o, _b, _k in promote}):
             lo, hi = ordinal * bs, (ordinal + 1) * bs
             if spans and spans[-1][1] == lo:
                 spans[-1] = (spans[-1][0], hi)
             else:
                 spans.append((lo, hi))
-        return Admission(n_shared, spans)
+        return Admission(n_shared, spans, n_host)
 
     def register_prefix(self, seq_id: int, tokens, layout=None):
         """Publish this sequence's fully written prompt blocks into the prefix
@@ -524,12 +632,24 @@ class PagedKVCache:
         if layout is None:
             layout = build_layout(np.asarray(tokens), self.block_size)
         table = self.pool.tables.get(seq_id, [])
+        published: List[Tuple[int, bytes]] = []
         for i, key in enumerate(layout.block_keys):
             if key is None or i >= len(table):
                 continue
             if key not in self._prefix_index:
                 self._prefix_index[key] = table[i]
                 self._block_key[table[i]] = key
+                published.append((table[i], key))
+        if published and self.host_store is not None and self.host_write_through:
+            # write-through to the host tier (one batched device->host
+            # gather): a DP-shared store makes these blocks promotable on
+            # sibling replicas immediately, not only after an HBM eviction
+            ids = jnp.asarray(np.asarray([b for b, _ in published], np.int32))
+            k_np = np.asarray(jnp.take(self.k, ids, axis=1))
+            v_np = np.asarray(jnp.take(self.v, ids, axis=1))
+            for j, (_b, key) in enumerate(published):
+                self.host_store.put(key, k_np[:, j], v_np[:, j],
+                                    owner=self.client_tag)
 
     def admit(self, seq_id: int, prompt_len: int) -> bool:
         """Length-only admission (no prefix sharing); kept for callers that

@@ -19,10 +19,13 @@ and the mesh sharding policy (``models.sharding``):
 * **DP (data axis, by block range).** Optionally the block axis shards over
   "data": DP replicas own disjoint *block ranges* of one pool array, each
   replica running fully independent admission (own free list, own refcounts,
-  own prefix index — cross-replica block sharing is the ROADMAP "distributed
-  block store" follow-on). ``block_range`` computes a replica's slice;
+  own prefix index). ``block_range`` computes a replica's slice;
   ``DataParallelEngineGroup`` (serving.engine) wires replica engines to one
-  shared array holder.
+  shared array holder. Cross-replica *content* sharing happens one tier
+  down: a ``serving.host_tier.HostBlockStore`` shared by the group mirrors
+  every replica's published prefix blocks host-side (content-hash keys are
+  replica-agnostic), so a document prefilled in one replica's block range is
+  a host-tier promotion — not a re-prefill — in another's.
 
 ``tp = 1`` (or no mesh) is bit-identical to the unsharded engine: layout-less
 construction takes exactly the legacy code path, and a 1-device mesh changes

@@ -105,7 +105,7 @@ def test_free_releases_chain_tail_first():
     pool = PagedPool(n_blocks=8, block_size=4, keep_on_release=lambda b: True)
     blocks = pool.allocate(1, 12)  # 3-block chain
     pool.free(1)
-    assert pool.cached == list(reversed(blocks))  # head evicted last
+    assert list(pool.cached) == list(reversed(blocks))  # head evicted last
 
 
 def test_hot_prefix_block_outlives_cold_blocks():

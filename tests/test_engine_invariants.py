@@ -15,7 +15,7 @@ def _cfg():
 
 
 def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
-                  long_decode: bool = False):
+                  long_decode: bool = False, preempt: str = "recompute"):
     """Bursty seeded workload: waves of submits interleaved with engine steps.
     Prompts mix fresh random sequences with shared-retrieved-context prefixes
     (32 tokens = 2 full blocks at block_size=16). ``long_decode`` makes
@@ -25,7 +25,7 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
     eng = GenerationEngine(
         _cfg(), max_batch=3, max_seq=96, n_blocks=n_blocks,
         prefill_chunk_size=16, token_budget=20,
-        scheduler=scheduler, interleave=interleave,
+        scheduler=scheduler, interleave=interleave, preempt=preempt,
     )
     ctx = rng.integers(0, 90, size=32).astype(np.int32)
     reqs = []
@@ -54,24 +54,35 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
 
 
 @pytest.mark.parametrize(
-    "seed,n_blocks,scheduler,interleave,long_decode",
+    "seed,n_blocks,scheduler,interleave,long_decode,preempt",
     [
-        (0, None, "fifo", True, False),       # fully provisioned pool
-        (1, None, "edf_slack", True, False),  # EDF admission + prefill grants
-        (2, 8, "fifo", True, False),          # tiny pool: admission backpressure
-        (3, 8, "fifo", False, False),         # sequential oracle under pressure
-        (4, 10, "edf_slack", True, False),
-        (5, 6, "fifo", True, True),           # long decodes: mid-decode preemption
+        (0, None, "fifo", True, False, "recompute"),   # fully provisioned pool
+        (1, None, "edf_slack", True, False, "recompute"),  # EDF admission + grants
+        (2, 8, "fifo", True, False, "recompute"),      # tiny pool: backpressure
+        (3, 8, "fifo", False, False, "recompute"),     # sequential oracle
+        (4, 10, "edf_slack", True, False, "recompute"),
+        (5, 6, "fifo", True, True, "recompute"),       # long decodes: preemption
+        (5, 6, "fifo", True, True, "swap"),            # swap-out preemption tier
+        (6, 6, "edf_slack", True, True, "swap"),
+        (3, 8, "fifo", False, False, "swap"),          # sequential + swap
+        (2, 8, "resident_first", True, False, "recompute"),  # eviction-aware
     ],
 )
 def test_engine_invariants_after_drain(seed, n_blocks, scheduler, interleave,
-                                       long_decode):
+                                       long_decode, preempt):
     eng, reqs = _run_workload(
         seed, n_blocks=n_blocks, scheduler=scheduler, interleave=interleave,
-        long_decode=long_decode,
+        long_decode=long_decode, preempt=preempt,
     )
     if long_decode:
         assert eng.preemptions >= 1  # the tiny pool must actually churn
+    if preempt == "swap" and eng.host_store is not None:
+        # the host tier drains refcount-clean: every swap set was restored
+        # (or dropped), and slot accounting closes over the store's capacity
+        hs = eng.host_store
+        assert hs.n_swapped == 0
+        assert len(hs.free) + hs.n_keyed == hs.n_blocks
+        assert eng.swap_ins == eng.swap_outs
 
     # every request drained
     assert all(r.done for r in reqs)
