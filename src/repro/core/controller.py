@@ -338,6 +338,8 @@ class PatchworkRuntime:
                 1.0 + self.engine.streaming_contention * load
             )
             self.metrics.chunk_history.append((self.clock.now, chunk))
+            self.telemetry.gauge(f"stream_chunk_size/{task.comp_name}",
+                                 self.clock.now, float(chunk))
         inst.busy_time += service
         self.clock.schedule(service, lambda: self._complete(inst, task, streams))
 

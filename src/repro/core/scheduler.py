@@ -33,6 +33,16 @@ def _arrival(item) -> float:
     return 0.0
 
 
+def edf_key(item) -> tuple:
+    """EDF-slack ordering key: (predicted slack, arrival). This is the ONE
+    ordering the serving stack uses for urgency everywhere it matters —
+    ``EDFSlack`` admission/grants consume it directly, and the streaming
+    transport (``core.streaming.PriorityFlusher``) flushes chunks sorted by
+    the same ``priority`` field, so a request served first is also the one
+    whose tokens leave the box first."""
+    return (getattr(item, "priority", 0.0), _arrival(item))
+
+
 class QueuePolicy:
     name = "fifo"
 
@@ -75,10 +85,7 @@ class EDFSlack(QueuePolicy):
     def select(self, queue: Sequence, now: float = 0.0) -> Optional[int]:
         if not queue:
             return None
-        return min(
-            range(len(queue)),
-            key=lambda i: (getattr(queue[i], "priority", 0.0), _arrival(queue[i])),
-        )
+        return min(range(len(queue)), key=lambda i: edf_key(queue[i]))
 
 
 class ResidentFirst(EDFSlack):
@@ -96,11 +103,8 @@ class ResidentFirst(EDFSlack):
             return None
         return min(
             range(len(queue)),
-            key=lambda i: (
-                -round(self.residency(queue[i]), 3),
-                getattr(queue[i], "priority", 0.0),
-                _arrival(queue[i]),
-            ),
+            key=lambda i: (-round(self.residency(queue[i]), 3),)
+            + edf_key(queue[i]),
         )
 
 

@@ -19,6 +19,7 @@ class StreamStats:
     items_written: int = 0
     chunks_flushed: int = 0
     bytes_flushed: int = 0
+    items_delivered: int = 0  # made it through the transport (PriorityFlusher)
 
 
 class StreamingObject:
@@ -103,11 +104,12 @@ class PriorityFlusher:
     priority order (least slack first), FIFO within a priority level."""
 
     def __init__(self):
-        self._pending = []  # (priority, seq, chunk, deliver_cb)
+        self._pending = []  # (priority, seq, stream, chunk, deliver_cb)
         self._seq = 0
 
     def submit(self, stream: "StreamingObject", chunk, deliver_cb):
-        self._pending.append((stream.priority, self._seq, chunk, deliver_cb))
+        self._pending.append(
+            (stream.priority, self._seq, stream, chunk, deliver_cb))
         self._seq += 1
 
     def flush(self, n: int = None):
@@ -115,8 +117,10 @@ class PriorityFlusher:
         self._pending.sort(key=lambda t: (t[0], t[1]))
         n = len(self._pending) if n is None else n
         out, self._pending = self._pending[:n], self._pending[n:]
-        for _, _, chunk, cb in out:
+        for _, _, stream, chunk, cb in out:
             cb(chunk)
+            if chunk is not None:
+                stream.stats.items_delivered += len(chunk)
         return len(out)
 
     @property

@@ -35,7 +35,7 @@ def serve_sim(app_name: str, rate: float, duration: float, engine: str = "patchw
 
 def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
                tp: int = 1, dp: int = 1, preempt: str = "recompute",
-               host_blocks: int = 0):
+               host_blocks: int = 0, pipeline: bool = True):
     """Serve a real reduced model with batched requests on this host.
 
     ``tp > 1`` shards the paged engine over a ("model",) mesh — TP-resident
@@ -58,7 +58,8 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     layout = None
     if tp > 1 or dp > 1:
         layout = ShardedPoolLayout(make_serving_mesh(tp, dp), dp_blocks=dp > 1)
-    tier = {"preempt": preempt, "host_blocks": host_blocks or None}
+    tier = {"preempt": preempt, "host_blocks": host_blocks or None,
+            "pipeline": pipeline}
     if dp > 1:
         eng = DataParallelEngineGroup(cfg, dp=dp, max_batch=4, max_seq=256,
                                       pool_layout=layout, **tier)
@@ -72,11 +73,18 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     ]
     eng.run_until_done()
     for r in reqs:
+        ss = r.stream.stats if r.stream is not None else None
+        chunks = f" chunks={ss.chunks_flushed}" if ss else ""
         print(f"  req {r.req_id}: {len(r.out_tokens)} tokens "
-              f"ttft={1e3*(r.first_token_at - r.submitted_at):.0f}ms")
+              f"ttft={1e3*(r.first_token_at - r.submitted_at):.0f}ms{chunks}")
     stats = eng.stats()
+    mode = "pipelined" if pipeline else "sync"
     print(f"[serve:real] {arch}: tp={tp} dp={dp} preempt={preempt} "
-          f"{stats['tokens_out']} tokens out")
+          f"mode={mode} {stats['tokens_out']} tokens out")
+    if "host_gap_s" in stats:
+        print(f"[serve:real] host gap: {1e3 * stats['host_gap_s']:.1f}ms total "
+              f"over {stats['dispatches']} dispatches "
+              f"(copy ops drained: {stats.get('copy_ops_drained', 0)})")
     if "host_store" in stats:
         print(f"[serve:real] host tier: {stats['host_store']}")
     if tp > 1 and dp == 1:
@@ -99,9 +107,13 @@ def main(argv=None):
                     help="data-parallel replica engines with independent "
                          "admission over block ranges of one shared pool")
     ap.add_argument("--preempt", default="recompute",
-                    choices=["recompute", "swap"],
+                    choices=["recompute", "swap", "cost"],
                     help="pool-exhaustion strategy: re-queue + re-prefill, "
-                         "or swap the victim's KV to the host tier")
+                         "swap the victim's KV to the host tier, or pick "
+                         "per victim from a swap-vs-recompute cost model")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable double-buffered dispatch (sync oracle mode: "
+                         "each step materializes before the next plan builds)")
     ap.add_argument("--host-blocks", type=int, default=0,
                     help="host-memory block-tier capacity (0 = no host tier "
                          "unless --preempt swap provisions one); shared "
@@ -109,7 +121,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.real:
         serve_real(args.arch, tp=args.tp, dp=args.dp, preempt=args.preempt,
-                   host_blocks=args.host_blocks)
+                   host_blocks=args.host_blocks, pipeline=not args.no_pipeline)
     else:
         serve_sim(args.app, args.rate, args.duration, args.engine, args.slo)
 

@@ -1,0 +1,161 @@
+"""Device runtime: executes ``StepPlan``s as jitted steps, double-buffered.
+
+The runner is the device half of the control-plane split. Its contract:
+
+* **Same programs, same numerics.** It runs the engine's OWN compiled step
+  programs (``_fused_step_jit`` / ``_decode_paged_jit``) unchanged, so the
+  logits — and therefore greedy tokens — are bit-identical to the
+  sequential oracle. Around them sit two tiny extra jits: a prev-token
+  substitution (decode rows feed the previous plan's sampled token straight
+  from device memory, no host roundtrip) and the sampler.
+
+* **Deferred materialization.** ``dispatch`` only ENQUEUES work: with
+  JAX's async dispatch the call returns as soon as the computation is
+  queued, holding the sampled-token array as a device future. The engine
+  materializes (``np.asarray``) one plan behind, so plan N+1 is built on
+  the host while step N runs on the device.
+
+* **Host-gap accounting.** The wall time the device sat idle between the
+  completion of one step and the dispatch of the next is the quantity the
+  whole refactor exists to shrink; the runner measures it (ready-probe at
+  build start + blocking materializes) instead of asserting it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.control_plane import StepPlan
+from repro.serving.sampler import sample_tokens
+
+
+def _substitute(tokens, prev, prev_slots):
+    """Replace column 0 of rows with ``prev_slots[b] >= 0`` by the previous
+    plan's device-resident sampled token for that row."""
+    idx = jnp.maximum(prev_slots, 0)
+    col0 = jnp.where(prev_slots >= 0, prev[idx], tokens[:, 0])
+    return tokens.at[:, 0].set(col0)
+
+
+def _is_ready(arr) -> bool:
+    """True when a device array's computation has finished (best effort:
+    backends without ``is_ready`` report ready, degrading the gap metric to
+    the blocking-materialize measurements, never the correctness path)."""
+    try:
+        return bool(arr.is_ready())
+    except AttributeError:
+        return True
+
+
+class PlanExec:
+    """A dispatched plan: the device future of its sampled tokens."""
+
+    __slots__ = ("plan", "tokens", "dispatched_at", "ready_at", "_host")
+
+    def __init__(self, plan: StepPlan, tokens, dispatched_at: float):
+        self.plan = plan
+        self.tokens = tokens          # (B,) device array, possibly in flight
+        self.dispatched_at = dispatched_at
+        self.ready_at: Optional[float] = None
+        self._host: Optional[np.ndarray] = None
+
+
+class DeviceRunner:
+    def __init__(self, engine):
+        self.eng = engine
+        self.last_plan_id = -1
+        self._last: Optional[PlanExec] = None         # prev-token source
+        self._outstanding: Optional[PlanExec] = None  # newest unmaterialized
+        self._idle_mark: Optional[float] = None       # when idleness observed
+        self.host_gap_s = 0.0
+        self.gap_samples: List[float] = []
+        self.n_dispatched = 0
+        # online per-valid-token step time (EMA over materialized plans);
+        # the cost-model preemption's recompute estimate consumes it
+        self.token_time_ema: Optional[float] = None
+        self._subst_jit = jax.jit(_substitute)
+        self._sample_jit = jax.jit(sample_tokens)
+
+    # --------------------------------------------------------------- probes
+    def probe_idle(self) -> None:
+        """Called at plan-build start: if the outstanding step already
+        finished, the device is idle from NOW until the next dispatch."""
+        if (self._outstanding is not None and self._idle_mark is None
+                and _is_ready(self._outstanding.tokens)):
+            self._idle_mark = time.perf_counter()
+
+    # ------------------------------------------------------------- dispatch
+    def dispatch(self, plan: StepPlan) -> PlanExec:
+        eng = self.eng
+        now = time.perf_counter()
+        if self._outstanding is not None and self._idle_mark is None:
+            # late probe: the step may have finished mid-build; counting the
+            # gap from now underestimates, never inflates, the idle time
+            if _is_ready(self._outstanding.tokens):
+                self._idle_mark = now
+        if self._idle_mark is not None:
+            gap = max(now - self._idle_mark, 0.0)
+            self.host_gap_s += gap
+            self.gap_samples.append(gap)
+        elif self._outstanding is not None:
+            self.gap_samples.append(0.0)  # device still busy: zero gap
+        self._idle_mark = None
+
+        eng._key, sk = jax.random.split(eng._key)
+        prev = (self._last.tokens if self._last is not None
+                else jnp.zeros((eng.max_batch,), jnp.int32))
+        toks_in = self._subst_jit(
+            jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots)
+        )
+        if plan.kind == "fused":
+            logits, eng.kv.k, eng.kv.v = eng._fused_step_jit(
+                eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
+                toks_in, jnp.asarray(plan.starts), jnp.asarray(plan.n_valid),
+                jnp.asarray(plan.positions), jnp.asarray(plan.p_end),
+                jnp.asarray(plan.s_start),
+            )
+        else:
+            logits, eng.kv.k, eng.kv.v = eng._decode_paged_jit(
+                eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
+                toks_in, jnp.asarray(plan.starts),
+            )
+        toks = self._sample_jit(sk, logits, jnp.asarray(plan.temps))
+        ex = PlanExec(plan, toks, now)
+        self._last = ex
+        self._outstanding = ex
+        self.last_plan_id = plan.plan_id
+        self.n_dispatched += 1
+        return ex
+
+    # ---------------------------------------------------------- materialize
+    def materialize(self, ex: PlanExec) -> np.ndarray:
+        """Block until ``ex``'s sampled tokens are on the host (idempotent).
+        When ``ex`` is the newest dispatched work, the device is idle from
+        here until the next dispatch — start the gap clock."""
+        if ex._host is None:
+            ex._host = np.asarray(ex.tokens)
+            t = time.perf_counter()
+            ex.ready_at = t
+            if self._outstanding is ex:
+                self._outstanding = None
+                self._idle_mark = t
+            if ex.plan.n_tokens > 0:
+                per = max(t - ex.dispatched_at, 1e-9) / ex.plan.n_tokens
+                self.token_time_ema = (
+                    per if self.token_time_ema is None
+                    else 0.8 * self.token_time_ema + 0.2 * per
+                )
+        return ex._host
+
+    # ---------------------------------------------------------------- stats
+    def summary(self) -> dict:
+        gaps = self.gap_samples
+        return {
+            "host_gap_s": self.host_gap_s,
+            "host_gap_mean_s": float(np.mean(gaps)) if gaps else 0.0,
+            "dispatches": self.n_dispatched,
+        }

@@ -57,6 +57,23 @@ shared across a ``DataParallelEngineGroup``, gives replicas cross-replica
 document-block sharing. Eviction-aware admission closes the loop: the
 ``resident_first`` scheduler policy prefers requests whose doc blocks are
 HBM- or host-resident (``core.scheduler``).
+
+Runtime / control-plane split (interleaved paged mode): the engine is a thin
+orchestrator over three layers — a host-side ``ControlPlane`` that builds an
+immutable ``StepPlan`` per step (``serving.control_plane``), a
+``DeviceRunner`` that executes plans through the engine's own jitted step
+programs with deferred (double-buffered) materialization and device-resident
+prev tokens (``serving.device_runner``), and a ``CopyEngine`` draining
+device<->host copies (swap fills, demotions, write-through) off the critical
+path between dispatches. ``pipeline=True`` (default) materializes sampled
+tokens one plan late so plan N+1 is built while step N runs;
+``pipeline=False`` materializes eagerly and is the greedy-token-exact sync
+oracle — the plan sequence is identical in both modes because all state a
+plan build reads is updated at build time. Token delivery is out-of-band:
+every request carries a ``StreamingObject`` whose chunks drain through one
+shared ``PriorityFlusher`` in EDF-slack order, with chunk size driven by
+measured load (``streaming_chunk_policy``). ``latency_summary`` reports the
+measured host gap (wall time the device sat idle between dispatches).
 """
 from __future__ import annotations
 
@@ -71,6 +88,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import QueuePolicy, make_policy
+from repro.core.streaming import PriorityFlusher, StreamingObject
 from repro.models import (
     decode_step,
     forward,
@@ -79,6 +97,8 @@ from repro.models import (
     paged_cache_supported,
     prefill_chunk,
 )
+from repro.serving.control_plane import ControlPlane, CopyEngine
+from repro.serving.device_runner import DeviceRunner, PlanExec
 from repro.serving.host_tier import HostBlockStore
 from repro.serving.paged_cache import (
     PagedKVCache,
@@ -123,6 +143,11 @@ class Request:
     finished_at: Optional[float] = None
     token_gaps: List[float] = field(default_factory=list)  # inter-token intervals
     max_token_gap: float = 0.0       # worst inter-token stall (decode SLO signal)
+    planned: int = 0                 # tokens scheduled by plans (>= len(out_tokens))
+    _tok_src: tuple = (-1, -1)       # (plan_id, row) holding the last sampled token
+    swap_keys: List = field(default_factory=list)  # prefix keys of the swap chain
+    stream: Optional[StreamingObject] = None       # out-of-band token delivery
+    delivered: List[int] = field(default_factory=list)  # tokens flushed downstream
 
     @property
     def prefilling(self) -> bool:
@@ -215,6 +240,11 @@ class GenerationEngine:
         preempt: str = "recompute",
         host_store: Optional[HostBlockStore] = None,
         host_blocks: Optional[int] = None,
+        pipeline: bool = True,
+        flusher: Optional[PriorityFlusher] = None,
+        host_bw_bytes_s: float = 8e9,
+        copy_budget: int = 4,
+        telemetry: Any = None,
     ):
         """``mesh`` / ``pool_layout`` shard the paged backend over a device
         mesh: params become TP-resident (Megatron layout, embed/lm_head
@@ -229,11 +259,22 @@ class GenerationEngine:
         a shared host store).
 
         ``preempt`` selects the pool-exhaustion strategy: ``"recompute"``
-        (release + re-queue the continuation) or ``"swap"`` (park the block
-        chain in the host tier, restore on re-admission). ``host_store`` /
-        ``host_blocks`` attach the host-memory tier explicitly; ``host_blocks``
-        sizes a fresh store, and ``preempt="swap"`` provisions one
-        automatically (device-pool-sized) when neither is given."""
+        (release + re-queue the continuation), ``"swap"`` (park the block
+        chain in the host tier, restore on re-admission) or ``"cost"``
+        (per-victim: swap when the estimated copy time beats the estimated
+        residency-discounted re-prefill time — see ``_swap_is_cheaper``).
+        ``host_store`` / ``host_blocks`` attach the host-memory tier
+        explicitly; ``host_blocks`` sizes a fresh store, and
+        ``preempt="swap"``/``"cost"`` provision one automatically
+        (device-pool-sized) when neither is given.
+
+        ``pipeline`` (interleaved paged mode only) defers sampled-token
+        materialization one step so plan N+1 is built while step N runs;
+        ``pipeline=False`` is the eager sync oracle, greedy-token-identical.
+        ``flusher`` shares one PriorityFlusher across engines (DP groups);
+        ``host_bw_bytes_s`` calibrates the cost model's swap estimate;
+        ``copy_budget`` bounds per-step async copy draining; ``telemetry``
+        (core.telemetry.Telemetry) receives per-step engine gauges."""
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
@@ -268,10 +309,21 @@ class GenerationEngine:
         self.preemptions = 0
         self.swap_outs = 0
         self.swap_ins = 0
-        if preempt not in ("recompute", "swap"):
+        if preempt not in ("recompute", "swap", "cost"):
             raise ValueError(f"unknown preempt strategy {preempt!r}")
         self.preempt = preempt
         self.host_store = host_store
+        self.pipeline = bool(pipeline) and self.interleave
+        self.flusher = flusher if flusher is not None else PriorityFlusher()
+        self.telemetry = telemetry
+        self.host_bw_bytes_s = host_bw_bytes_s
+        self.copy_budget = copy_budget
+        self.cost_swap_choices = 0
+        self.cost_recompute_choices = 0
+        self.swap_reshared_blocks = 0
+        self._copy = CopyEngine()
+        self._inflight: Optional[PlanExec] = None
+        self._build_emitted: Optional[Dict[int, List[int]]] = None
 
         if self.backend == "paged":
             self.block_size = block_size
@@ -301,7 +353,8 @@ class GenerationEngine:
                 if self.host_store is None:
                     self.host_store = kv.host_store  # DP group's shared tier
             else:
-                if self.host_store is None and (host_blocks or preempt == "swap"):
+                if self.host_store is None and (host_blocks
+                                                or preempt in ("swap", "cost")):
                     self.host_store = HostBlockStore.for_config(
                         cfg, host_blocks or n_blocks, block_size
                     )
@@ -313,6 +366,11 @@ class GenerationEngine:
             # reserved scratch block: swallows masked padding/inactive-slot
             # writes and backs clamped gathers of unallocated table entries
             self._null_block = self.kv.pool.allocate(_NULL_SEQ, 1)[0]
+            # async copy engine: the cache's demotion/write-through copies and
+            # the engine's swap-set fills drain through it between dispatches
+            self.kv.copy_engine = self._copy
+            self.control = ControlPlane(self)
+            self.runner = DeviceRunner(self)
             if pool_layout is not None:
                 # pin the pool arrays' sharding across steps: without
                 # out_shardings the partitioner could legally re-place the
@@ -349,23 +407,44 @@ class GenerationEngine:
         req = Request(self._next_id, prompt, max_new, temperature, priority)
         req.segprompt = segprompt
         req.submitted_at = time.monotonic()
+        # out-of-band delivery: tokens stream through a per-request
+        # StreamingObject whose chunks drain via the shared PriorityFlusher
+        # in EDF-slack order (req.priority IS the predicted slack)
+        req.stream = StreamingObject(priority=priority)
+        req.stream.on_chunk(self._make_chunk_cb(req))
         self._next_id += 1
         self.waiting.append(req)
         return req
 
+    def _make_chunk_cb(self, req: Request):
+        def cb(chunk):
+            if chunk is None:
+                return  # EOS marker: nothing left to transport
+            self.flusher.submit(req.stream, chunk, req.delivered.extend)
+        return cb
+
+    @property
+    def pending(self) -> bool:
+        """True while a dispatched plan's tokens await materialization."""
+        return self._inflight is not None
+
     def run_until_done(self, max_steps: int = 10_000) -> None:
-        while (self.waiting or any(self.slots)) and max_steps:
+        while (self.waiting or any(self.slots) or self.pending) and max_steps:
             self.step()
             max_steps -= 1
+        self._drain_copies(full=True)
+        self.flusher.flush()
 
     def stats(self) -> Dict[str, Any]:
         s: Dict[str, Any] = {
             "backend": self.backend,
             "interleave": self.interleave,
+            "pipeline": self.pipeline,
             "steps": self.steps,
             "tokens_out": self.tokens_out,
             "prefill_tokens": self.prefill_tokens,
             "preemptions": self.preemptions,
+            "stream_backlog": self.flusher.backlog,
         }
         if self.backend == "paged":
             s["utilization"] = self.kv.utilization()
@@ -378,6 +457,13 @@ class GenerationEngine:
             s["preempt"] = self.preempt
             s["swap_outs"] = self.swap_outs
             s["swap_ins"] = self.swap_ins
+            s["swap_reshared_blocks"] = self.swap_reshared_blocks
+            s["cost_swap_choices"] = self.cost_swap_choices
+            s["cost_recompute_choices"] = self.cost_recompute_choices
+            s["copy_backlog"] = self._copy.backlog
+            s["copy_ops_drained"] = self._copy.drained
+            s["stream_chunk_size"] = self.control.last_chunk_size
+            s.update(self.runner.summary())
             if self.host_store is not None:
                 s["host_store"] = self.host_store.stats()
         return s
@@ -441,6 +527,11 @@ class GenerationEngine:
     hit_rate_min_tokens: int = 64
     cold_start_hit_rate: float = 0.0  # documented cold-start default
 
+    # cursor helpers shared with the control plane (module-level functions,
+    # re-exported as methods so ControlPlane needs only the engine handle)
+    _advance_cursor = staticmethod(_advance_cursor)
+    _max_grant = staticmethod(_max_grant)
+
     def _measured_rate(self, hit_tokens, window: int,
                        min_tokens: Optional[int],
                        default: Optional[float]) -> float:
@@ -484,10 +575,18 @@ class GenerationEngine:
         the per-token inter-arrival distribution pooled across requests (the
         SLO quantity: a sequential prefill stalling every decode slot shows up
         directly as fat-tailed TPOT); ``gap_p95`` is the p95 of the
-        per-request WORST inter-token stall."""
+        per-request WORST inter-token stall. Paged engines also report the
+        measured host gap — wall time the device sat idle between the end of
+        one dispatched step and the next dispatch (total and per-dispatch
+        mean) — the quantity the pipelined control-plane split shrinks."""
         done = [r for r in self.finished
                 if r.first_token_at is not None and r.finished_at is not None]
         out: Dict[str, float] = {"n_finished": float(len(done))}
+        if self.backend == "paged":
+            rs = self.runner.summary()
+            out["host_gap_total_s"] = float(rs["host_gap_s"])
+            out["host_gap_mean_s"] = float(rs["host_gap_mean_s"])
+            out["dispatches"] = float(rs["dispatches"])
         if not done:
             return out
         ttft = [r.first_token_at - r.submitted_at for r in done]
@@ -563,6 +662,8 @@ class GenerationEngine:
             req.truncated = True
             req.finished_at = time.monotonic()
             self.finished.append(req)
+            if req.stream is not None and not req.stream.closed:
+                req.stream.close()
             return False
         layout = build_layout(
             req.segprompt if req.segprompt is not None else req.prompt,
@@ -585,27 +686,34 @@ class GenerationEngine:
         return (self.kv.client_tag, req.req_id)
 
     def _swap_out(self, victim: Request) -> bool:
-        """Park a victim's block chain in the host tier: one batched
-        device->host gather of its table's blocks, then the usual
-        release/re-queue. Returns False when the chain cannot be pinned (no
-        host store, or its unpinned capacity is exhausted) — the caller
-        falls back to recompute preemption.
+        """Park a victim's block chain in the host tier. The capacity check
+        and slot pinning are synchronous (``reserve_seq`` — all-or-nothing,
+        so a False return still means "fall back to recompute" immediately),
+        but the actual copy is deferred: the device-side gathers are
+        dispatched here (JAX arrays are immutable, so the captured values
+        are fixed even if the pool blocks are reused by later plans) and the
+        blocking host materialization drains through the copy engine between
+        dispatches. ``_swap_in`` syncs the tag before reading.
 
-        Known trade-off: refcount-shared prefix blocks are COPIED into the
-        swap set and restored as private duplicates, so swap-in can need
-        more fresh blocks than recompute re-admission (which would re-share
-        still-indexed blocks). Re-sharing at swap-in would have to survive
-        the shared block being evicted while the victim is parked, i.e. it
-        still needs the saved contents as the fallback — copying keeps the
-        restore unconditionally exact at the cost of those extra blocks."""
+        The chain's prefix keys are captured pre-release (``swap_keys``) so
+        re-admission can re-share any block whose key is still live in the
+        HBM index instead of restoring a private duplicate."""
         blocks = list(self.kv.pool.tables.get(victim.req_id, []))
         if self.host_store is None or not blocks:
             return False
-        ids = jnp.asarray(np.asarray(blocks, np.int32))
-        k_np = np.asarray(jnp.take(self.kv.k, ids, axis=1))
-        v_np = np.asarray(jnp.take(self.kv.v, ids, axis=1))
-        if not self.host_store.save_seq(self._swap_tag(victim), k_np, v_np):
+        tag = self._swap_tag(victim)
+        if self.host_store.reserve_seq(tag, len(blocks)) is None:
             return False
+        victim.swap_keys = [self.kv._block_key.get(b) for b in blocks]
+        ids = jnp.asarray(np.asarray(blocks, np.int32))
+        k_gather = jnp.take(self.kv.k, ids, axis=1)
+        v_gather = jnp.take(self.kv.v, ids, axis=1)
+        store = self.host_store
+
+        def _fill(k_gather=k_gather, v_gather=v_gather):
+            store.fill_seq(tag, np.asarray(k_gather), np.asarray(v_gather))
+
+        self._copy.submit(_fill, tag=tag)
         victim.swap_len = self.kv.lengths.get(victim.req_id, victim.pos)
         victim.swapped = True
         self.kv.release(victim.req_id)
@@ -618,24 +726,77 @@ class GenerationEngine:
         return True
 
     def _swap_in(self, req: Request) -> bool:
-        """Restore a swapped-out request: allocate a fresh chain of the same
-        length, scatter the parked contents back (one batched host->device
-        write), and resume the cursor/position state exactly where swap-out
-        left it — no prefill is repaid. All-or-nothing: on backpressure the
-        swap set stays pinned and the request stays queued."""
+        """Restore a swapped-out request and resume its cursor/position
+        state exactly where swap-out left it — no prefill is repaid.
+        All-or-nothing: on backpressure the swap set stays pinned and the
+        request stays queued.
+
+        Re-sharing: a chain block whose prefix key is STILL live in the HBM
+        index (the shared copy survived the victim's absence — including the
+        victim's own released blocks sitting in the warm LRU) is re-attached
+        as a refcounted share instead of a private duplicate restored from
+        host; only the remaining ordinals are copied back. The saved
+        contents stay the fallback for any block whose key was evicted
+        meanwhile, so the restore is unconditionally exact either way."""
         tag = self._swap_tag(req)
+        self._copy.sync(tag)  # our deferred fill must land before the read
         n = self.host_store.saved_blocks(tag)
-        if n > self.kv.pool.n_free:
+        keys = req.swap_keys if len(req.swap_keys) == n else [None] * n
+        shared: Dict[int, int] = {}
+        if self.kv.prefix_sharing:
+            for i, key in enumerate(keys):
+                if key is not None:
+                    b = self.kv._prefix_index.get(key)
+                    if b is not None:
+                        shared[i] = b
+        # capacity: fresh allocations plus warm (refcount-0) blocks revived
+        # by sharing — counted by unique block, mirroring admit_tokens
+        n_fresh = n - len(shared)
+        n_warm = sum(1 for b in set(shared.values())
+                     if self.kv.pool.refcounts.get(b, 0) == 0)
+        if n_fresh + n_warm > self.kv.pool.n_free:
             return False  # backpressure: blocks not yet available
-        blocks = self.kv.pool.allocate(req.req_id, n * self.block_size)
         k_np, v_np = self.host_store.restore_seq(tag)
-        ids = jnp.asarray(np.asarray(blocks, np.int32))
-        self.kv.k = self.kv.k.at[:, ids].set(jnp.asarray(k_np))
-        self.kv.v = self.kv.v.at[:, ids].set(jnp.asarray(v_np))
+        fresh_ords: List[int] = []
+        fresh_ids: List[int] = []
+        for i in range(n):
+            if i in shared:
+                self.kv.pool.share(req.req_id, shared[i])
+            else:
+                b = self.kv.pool.allocate(req.req_id, 1)[0]
+                fresh_ords.append(i)
+                fresh_ids.append(b)
+        if fresh_ids:
+            ids = jnp.asarray(np.asarray(fresh_ids, np.int32))
+            self.kv.k = self.kv.k.at[:, ids].set(jnp.asarray(k_np[:, fresh_ords]))
+            self.kv.v = self.kv.v.at[:, ids].set(jnp.asarray(v_np[:, fresh_ords]))
         self.kv.lengths[req.req_id] = req.swap_len
+        self.swap_reshared_blocks += len(shared)
+        req.swap_keys = []
         req.swapped = False
         self.swap_ins += 1
         return True
+
+    def _swap_is_cheaper(self, victim: Request) -> bool:
+        """Cost model behind ``preempt="cost"``: estimated swap time (chain
+        bytes over host-link bandwidth, both directions) vs estimated
+        recompute time (tokens to re-prefill x measured per-token step time,
+        discounted by the fraction of the chain still resident in the HBM
+        prefix index — those blocks re-share for free at re-admission)."""
+        chain = self.kv.pool.tables.get(victim.req_id, [])
+        if self.host_store is None or not chain:
+            return False
+        shape = self.kv.k.shape  # (G, n_blocks, bs, KVH, hd)
+        blk_bytes = 2 * shape[0] * int(np.prod(shape[2:])) * self.kv.k.dtype.itemsize
+        swap_s = 2.0 * len(chain) * blk_bytes / max(self.host_bw_bytes_s, 1.0)
+        tok_s = self.runner.token_time_ema
+        if tok_s is None:
+            tok_s = 1e-3  # prior before any plan has materialized
+        resident = sum(1 for b in set(chain) if b in self.kv._block_key)
+        residency = resident / max(len(chain), 1)
+        n_tok = self.kv.lengths.get(victim.req_id, victim.pos)
+        recompute_s = n_tok * tok_s * (1.0 - residency)
+        return swap_s < recompute_s
 
     # ------------------------------------------------------------ internals
     def _decode_fn(self, params, cache, tokens, pos):
@@ -776,8 +937,21 @@ class GenerationEngine:
         (prompt + generated tokens); re-admission re-prefills, reusing any of
         its own prefix blocks that survived in the warm cache (or, with a
         host store attached, were demoted to it). A mid-prefill victim
-        restarts its cursor from scratch (its partial K/V is discarded)."""
-        if self.preempt == "swap" and self._swap_out(victim):
+        restarts its cursor from scratch (its partial K/V is discarded).
+
+        ``cost``: per-victim choice — swap when ``_swap_is_cheaper`` says the
+        copy beats the residency-discounted re-prefill."""
+        # the victim's continuation (out_tokens) and swap snapshot must be
+        # complete: land any still-inflight plan before capturing state
+        self._sync_inflight()
+        strategy = self.preempt
+        if strategy == "cost":
+            strategy = "swap" if self._swap_is_cheaper(victim) else "recompute"
+            if strategy == "swap":
+                self.cost_swap_choices += 1
+            else:
+                self.cost_recompute_choices += 1
+        if strategy == "swap" and self._swap_out(victim):
             return
         self.kv.release(victim.req_id)
         if victim.slot >= 0 and self.slots[victim.slot] is victim:
@@ -849,14 +1023,99 @@ class GenerationEngine:
 
     # ------------------------------------------------------------- stepping
     def step(self) -> Dict[int, List[int]]:
-        """One engine iteration. Interleaved paged mode: admit, then one fused
-        mixed batch (decode rows + budgeted prefill chunks). Sequential mode:
-        admit (blocking whole-prompt prefill), then one batched decode."""
+        """One engine iteration. Interleaved paged mode: the control plane
+        builds one StepPlan (admission + fused mixed batch) and the device
+        runner dispatches it; sampled tokens materialize this step
+        (``pipeline=False``, the sync oracle) or next step (``pipeline=True``,
+        double-buffered). Sequential mode: admit (blocking whole-prompt
+        prefill), then one batched decode. Returns the tokens whose emission
+        LANDED this step — in pipelined mode that is the previous plan's."""
         for r in self.waiting:
             r.queued_steps += 1
         if self.interleave:
-            return self._step_interleaved()
-        return self._step_sequential()
+            return self._step_planned()
+        out = self._step_sequential()
+        self._drain_copies(full=True)
+        self.flusher.flush()
+        return out
+
+    def _step_planned(self) -> Dict[int, List[int]]:
+        emitted: Dict[int, List[int]] = {}
+        # preemption inside build may have to sync the inflight plan; its
+        # emissions land in this step's result
+        self._build_emitted = emitted
+        try:
+            self.runner.probe_idle()
+            plan = self.control.build_plan()
+        finally:
+            self._build_emitted = None
+        ex = self.runner.dispatch(plan) if plan is not None else None
+        if ex is not None:
+            self.steps += 1
+        # drain deferred copies while the device chews on the new plan (fully
+        # on idle steps — nothing to overlap with)
+        self._drain_copies(full=ex is None)
+        prev, self._inflight = self._inflight, ex
+        if prev is not None:
+            _merge_emitted(emitted, self._materialize(prev))
+        if self._inflight is not None and (not self.pipeline or self.eos_token >= 0):
+            # sync oracle — or eos enabled: completion must be observed
+            # before the next plan is built, so pipelining degenerates
+            cur, self._inflight = self._inflight, None
+            _merge_emitted(emitted, self._materialize(cur))
+        self.flusher.flush()
+        if self.telemetry is not None:
+            now = time.monotonic()
+            self.telemetry.gauge("engine/host_gap_s", now, self.runner.host_gap_s)
+            self.telemetry.gauge("engine/copy_backlog", now, self._copy.backlog)
+            if self.control.last_chunk_size is not None:
+                self.telemetry.gauge("engine/stream_chunk_size", now,
+                                     self.control.last_chunk_size)
+        return emitted
+
+    def _materialize(self, ex: PlanExec) -> Dict[int, List[int]]:
+        """Land a dispatched plan's emissions: pull the sampled tokens to the
+        host, write them to out_tokens + streams, finalize finishing rows
+        (and eos hits, which only exist with ``eos_token >= 0`` — the sync
+        path above)."""
+        toks = self.runner.materialize(ex)
+        emitted: Dict[int, List[int]] = {}
+        for req, row, finishing in ex.plan.emit_rows:
+            tok = int(toks[row])
+            self._emit_token(req, tok)
+            emitted.setdefault(req.req_id, []).append(tok)
+            if finishing or tok == self.eos_token:
+                self._finalize(req)
+        return emitted
+
+    def _sync_inflight(self) -> None:
+        """Materialize the inflight plan NOW (mid-build): preemption must see
+        complete out_tokens before capturing a victim's continuation/swap
+        state. Emissions merge into the current step's result."""
+        if self._inflight is None:
+            return
+        ex, self._inflight = self._inflight, None
+        out = self._materialize(ex)
+        if self._build_emitted is not None:
+            _merge_emitted(self._build_emitted, out)
+
+    def _retire_slot(self, req: Request) -> None:
+        """Build-time completion: free the slot and release the block chain
+        as soon as the plan DECIDES the request is done (count-based), so the
+        next plan can reuse both. Device program order guarantees the
+        released blocks' final writes land before any later plan touches
+        them. Emission-side effects happen at materialize."""
+        if req.slot >= 0 and self.slots[req.slot] is req:
+            self.slots[req.slot] = None
+        self.kv.release(req.req_id)
+
+    def _drain_copies(self, full: bool = False) -> None:
+        """Advance the async copy engine: the whole backlog when ``full``
+        (idle steps, drain/exit paths), else up to ``copy_budget`` ops —
+        bounded host work per step, scheduled between dispatches."""
+        if self.backend == "paged":
+            self.kv.flush_write_through()
+        self._copy.drain(None if full else self.copy_budget)
 
     def _step_sequential(self) -> Dict[int, List[int]]:
         blocked = False
@@ -888,123 +1147,6 @@ class GenerationEngine:
         if not active:
             return {}
         return self._decode_batch(active)
-
-    def _step_interleaved(self) -> Dict[int, List[int]]:
-        self._admit_interleaved()
-        self._ensure_decode_capacity()
-        active = [r for r in self.slots if r is not None]
-        if not active:
-            return {}
-        prefill_rows = sorted((r for r in active if r.prefilling),
-                              key=lambda r: r.req_id)
-        if not prefill_rows:
-            return self._decode_batch(active)
-        decode_rows = [r for r in active if not r.prefilling]
-
-        # ---- token-budget grants: decode rows reserve one token each; the
-        # remaining budget goes to mid-prefill rows in policy order (always
-        # at least one token, so prefill can never fully starve)
-        budget = max(self.token_budget - len(decode_rows), 1)
-        grants: Dict[int, int] = {}
-        for r in self.scheduler.order(prefill_rows):
-            if budget <= 0:
-                break
-            c = min(_max_grant(r, self.prefill_chunk_size), budget)
-            grants[r.req_id] = c
-            budget -= c
-
-        # ---- compose the fused batch: every row a chunk at its own cursor
-        B, C = self.max_batch, self.prefill_chunk_size
-        tokens = np.zeros((B, C), np.int32)
-        starts = np.zeros((B,), np.int32)
-        n_valid = np.zeros((B,), np.int32)
-        temps = np.zeros((B,), np.float32)
-        positions = np.zeros((B, C), np.int32)
-        p_end = np.zeros((B, C), np.int32)
-        s_start = np.zeros((B, C), np.int32)
-        tables = np.full((B, self._view_blocks), self._null_block, np.int32)
-        rows = self.kv.pool.table_array([r.req_id for r in active], self._view_blocks)
-        for i, r in enumerate(active):
-            backed = rows[i] >= 0
-            tables[r.slot, backed] = rows[i][backed]
-            temps[r.slot] = r.temperature
-            if r.prefilling:
-                c = grants.get(r.req_id, 0)
-                tokens[r.slot, :c] = r.prompt[r.prefill_pos : r.prefill_pos + c]
-                starts[r.slot] = r.prefill_pos
-                n_valid[r.slot] = c
-                pp, pe, ss = self._seg_arrays(r, r.prefill_pos, c, C)
-                positions[r.slot], p_end[r.slot], s_start[r.slot] = pp[0], pe[0], ss[0]
-            else:
-                tokens[r.slot, 0] = r.out_tokens[-1] if r.out_tokens else 0
-                starts[r.slot] = r.pos
-                n_valid[r.slot] = 1
-                positions[r.slot, 0] = r.pos  # decoded tokens: position == slot
-
-        logits, self.kv.k, self.kv.v = self._fused_step_jit(
-            self.params, self.kv.k, self.kv.v, jnp.asarray(tables),
-            jnp.asarray(tokens), jnp.asarray(starts), jnp.asarray(n_valid),
-            jnp.asarray(positions), jnp.asarray(p_end), jnp.asarray(s_start),
-        )
-        self.steps += 1
-        self._key, sk = jax.random.split(self._key)
-        toks = np.asarray(sample_tokens(sk, logits, jnp.asarray(temps)))
-
-        emitted: Dict[int, List[int]] = {}
-        for r in decode_rows:
-            tok = int(toks[r.slot])
-            r.pos += 1
-            self.kv.lengths[r.req_id] = r.pos
-            self._emit(r, tok)
-            emitted.setdefault(r.req_id, []).append(tok)
-        for r in prefill_rows:
-            c = grants.get(r.req_id, 0)
-            if c == 0:
-                continue  # no budget this step; cursor holds
-            r.prefill_pos += c
-            self.prefill_tokens += c
-            _advance_cursor(r)  # skip cache-served spans for free
-            self.kv.lengths[r.req_id] = r.prefill_pos
-            if r.prefill_pos >= r.prefill_cap:
-                # prefill complete: publish prompt blocks, sample first token
-                self.kv.register_prefix(
-                    r.req_id, np.asarray(r.prompt[: r.prefill_cap], np.int32),
-                    r.layout,
-                )
-                r.pos = r.prefill_cap
-                tok = int(toks[r.slot])
-                self._emit(r, tok)
-                emitted.setdefault(r.req_id, []).append(tok)
-        return emitted
-
-    def _admit_interleaved(self):
-        """Fill free slots from the waiting queue in policy order, allocating
-        blocks only — prefill itself runs inside later step() batches via the
-        request's cursor."""
-        free = [s for s in range(self.max_batch) if self.slots[s] is None]
-        while free and self.waiting:
-            i = self.scheduler.select(self.waiting)
-            req = self.waiting[i]
-            if not req.swapped and self._prefix_pending(req):
-                break  # leader still prefilling this prefix; wait to share it
-            was_swapped = req.swapped  # _try_admit clears it on restore
-            if not self._try_admit(req):
-                if req.done:  # unfittable request failed out; try the next
-                    self.waiting.pop(i)
-                    continue
-                break  # the policy's head-of-line waits for blocks
-            self.waiting.pop(i)
-            slot = free.pop(0)
-            if not was_swapped:
-                cap = self._prompt_cap(req)
-                req.truncated = cap < len(req.prompt)
-                req.prefill_cap = cap
-                req.prefill_pos = 0
-                _advance_cursor(req)  # shared blocks already carry their K/V
-            # a swap-restored request keeps its cursor/position state: it
-            # resumes mid-prefill or mid-decode exactly where swap-out left it
-            req.slot = slot
-            self.slots[slot] = req
 
     def _prefix_pending(self, req: Request) -> bool:
         """True while an active request is still mid-prefill on content this
@@ -1072,7 +1214,9 @@ class GenerationEngine:
                 self.slots[r.slot] = None
         return emitted
 
-    def _emit(self, req: Request, tok: int):
+    def _emit_token(self, req: Request, tok: int):
+        """Emission side effects of one materialized token: timestamps,
+        out_tokens, counters, and the out-of-band stream write."""
         now = time.monotonic()
         if req.first_token_at is None:
             req.first_token_at = now
@@ -1082,20 +1226,39 @@ class GenerationEngine:
         req.last_token_at = now
         req.out_tokens.append(tok)
         self.tokens_out += 1
+        if req.stream is not None:
+            req.stream.write(tok)
+
+    def _finalize(self, req: Request):
+        """Completion side effects (idempotent): done flag, finished window,
+        stream close — plus slot/block release for paths that did not already
+        retire at plan-build time (sequential mode, eos hits)."""
+        if req.done:
+            return
+        req.done = True
+        req.finished_at = (req.last_token_at if req.last_token_at is not None
+                           else time.monotonic())
+        self.finished.append(req)
+        if len(self.finished) > self.max_finished:
+            del self.finished[: -self.max_finished]
+        if req.slot >= 0 and self.slots[req.slot] is req:
+            self.slots[req.slot] = None
+        if self.backend == "paged":
+            self.kv.release(req.req_id)  # no-op if already released
+        if req.stream is not None and not req.stream.closed:
+            req.stream.close()
+
+    def _emit(self, req: Request, tok: int):
+        """Eager emit (sequential + dense paths): token side effects plus the
+        historical completion check applied immediately."""
+        self._emit_token(req, tok)
+        req.planned = len(req.out_tokens)
         if (
             len(req.out_tokens) >= req.max_new
             or tok == self.eos_token
             or req.pos >= self.max_seq - 1
         ):
-            req.done = True
-            req.finished_at = now
-            self.finished.append(req)
-            if len(self.finished) > self.max_finished:
-                del self.finished[: -self.max_finished]
-            if req.slot >= 0 and self.slots[req.slot] is req:
-                self.slots[req.slot] = None
-            if self.backend == "paged":
-                self.kv.release(req.req_id)
+            self._finalize(req)
 
 
 class DataParallelEngineGroup:
@@ -1140,11 +1303,15 @@ class DataParallelEngineGroup:
         total = per * dp
         self.pool_layout = pool_layout
         if host_store is None and (host_blocks
-                                   or engine_kwargs.get("preempt") == "swap"):
+                                   or engine_kwargs.get("preempt") in ("swap", "cost")):
             host_store = HostBlockStore.for_config(
                 cfg, host_blocks or total, block_size
             )
         self.host_store = host_store
+        # one shared transport: chunks from every replica's streams flush in
+        # global EDF-slack order, not per-replica order
+        self.flusher = PriorityFlusher()
+        engine_kwargs.setdefault("flusher", self.flusher)
         self.engines: List[GenerationEngine] = []
         arrays: Optional[PoolArrays] = None
         params = None
@@ -1177,15 +1344,18 @@ class DataParallelEngineGroup:
 
     def step(self) -> None:
         for eng in self.engines:
-            if eng.waiting or any(eng.slots):
+            if eng.waiting or any(eng.slots) or eng.pending:
                 eng.step()
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
         while max_steps and any(
-            e.waiting or any(e.slots) for e in self.engines
+            e.waiting or any(e.slots) or e.pending for e in self.engines
         ):
             self.step()
             max_steps -= 1
+        for eng in self.engines:
+            eng._drain_copies(full=True)
+        self.flusher.flush()
 
     def stats(self) -> Dict[str, Any]:
         per = [e.stats() for e in self.engines]
@@ -1201,6 +1371,11 @@ class DataParallelEngineGroup:
             out["cross_replica_host_hits"] = self.host_store.cross_hits
             out["host_store"] = self.host_store.stats()
         return out
+
+
+def _merge_emitted(into: Dict[int, List[int]], more: Dict[int, List[int]]) -> None:
+    for rid, toks in more.items():
+        into.setdefault(rid, []).extend(toks)
 
 
 def _shareable_doc_heads(segprompt, block_size: int) -> set:

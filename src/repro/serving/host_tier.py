@@ -174,25 +174,44 @@ class HostBlockStore:
         return self.k[:, slots].copy(), self.v[:, slots].copy()
 
     # ------------------------------------------------------------- swap API
-    def save_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray) -> bool:
-        """Pin a preempted sequence's block chain (``(G, n, bs, KVH, hd)``)
-        under ``tag``. All-or-nothing: returns False (store unchanged apart
-        from any keyed evictions attempted for room) when the chain cannot be
-        pinned — callers fall back to recompute preemption."""
+    def reserve_seq(self, tag: Any, n: int) -> Optional[List[int]]:
+        """Pin ``n`` slots for a preempted sequence under ``tag`` WITHOUT
+        contents. The reserve/fill split lets the capacity decision stay
+        synchronous (all-or-nothing, ``None`` on failure so callers fall back
+        to recompute) while the device→host copies drain asynchronously via
+        ``fill_seq``. Returns the pinned slot list on success."""
         if tag in self._swap:
             raise ValueError(f"swap tag {tag!r} already saved")
-        n = int(k_blocks.shape[1])
         if n == 0 or n > len(self.free) + len(self._lru):
-            return False
+            return None
         slots = []
         for _ in range(n):
             s = self._take_slot()
             assert s is not None  # capacity checked above
             slots.append(s)
-        self.k[:, slots] = k_blocks
-        self.v[:, slots] = v_blocks
         self._swap[tag] = slots
         self.swap_outs += 1
+        return slots
+
+    def fill_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray) -> None:
+        """Fill a reserved swap set's contents (async copy-engine path).
+        Tolerant of a tag that was dropped before the copy drained."""
+        slots = self._swap.get(tag)
+        if slots is None:
+            return
+        self.k[:, slots] = k_blocks
+        self.v[:, slots] = v_blocks
+
+    def save_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray) -> bool:
+        """Pin a preempted sequence's block chain (``(G, n, bs, KVH, hd)``)
+        under ``tag``. All-or-nothing: returns False (store unchanged apart
+        from any keyed evictions attempted for room) when the chain cannot be
+        pinned — callers fall back to recompute preemption. Synchronous
+        convenience over ``reserve_seq`` + ``fill_seq``."""
+        slots = self.reserve_seq(tag, int(k_blocks.shape[1]))
+        if slots is None:
+            return False
+        self.fill_seq(tag, k_blocks, v_blocks)
         return True
 
     def saved_blocks(self, tag: Any) -> int:

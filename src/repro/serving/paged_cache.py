@@ -418,6 +418,12 @@ class PagedKVCache:
         self.host_store = host_store
         self.host_write_through = host_write_through
         self.client_tag = client_tag if client_tag is not None else id(self)
+        # optional async copy engine (serving.control_plane.CopyEngine): when
+        # attached, demotions and write-through publishes defer their blocking
+        # host materialization off the step's critical path. None = sync copies
+        # (standalone cache usage), bit-identical host-tier contents either way.
+        self.copy_engine = None
+        self._wt_pending: List[Tuple[int, bytes]] = []  # (block, key) to write through
         self._prefix_index: Dict[bytes, int] = {}   # chain hash -> block id
         self._block_key: Dict[int, bytes] = {}      # reverse map for eviction
         self.shared_token_hits = 0                  # prompt tokens served from shared blocks
@@ -455,6 +461,22 @@ class PagedKVCache:
                 # copies just for put() to discard them.
                 if self.host_store.contains(key):
                     self.host_store.touch(key)
+                elif self.copy_engine is not None:
+                    # deferred demotion: the device-side slices are captured
+                    # NOW (immutable array values — a later reuse of the pool
+                    # block cannot corrupt them); only the blocking host
+                    # materialization waits for a copy-engine drain slot
+                    k_blk, v_blk = self.k[:, block_id], self.v[:, block_id]
+                    store, owner = self.host_store, self.client_tag
+
+                    def _demote(key=key, k_blk=k_blk, v_blk=v_blk):
+                        if store.contains(key):
+                            store.touch(key)  # raced with a write-through/put
+                        else:
+                            store.put(key, np.asarray(k_blk),
+                                      np.asarray(v_blk), owner=owner)
+
+                    self.copy_engine.submit(_demote, tag=key)
                 else:
                     self.host_store.put(
                         key, np.asarray(self.k[:, block_id]),
@@ -641,15 +663,53 @@ class PagedKVCache:
                 self._block_key[table[i]] = key
                 published.append((table[i], key))
         if published and self.host_store is not None and self.host_write_through:
-            # write-through to the host tier (one batched device->host
-            # gather): a DP-shared store makes these blocks promotable on
-            # sibling replicas immediately, not only after an HBM eviction
-            ids = jnp.asarray(np.asarray([b for b, _ in published], np.int32))
-            k_np = np.asarray(jnp.take(self.k, ids, axis=1))
-            v_np = np.asarray(jnp.take(self.v, ids, axis=1))
-            for j, (_b, key) in enumerate(published):
-                self.host_store.put(key, k_np[:, j], v_np[:, j],
-                                    owner=self.client_tag)
+            if self.copy_engine is not None:
+                # the pipelined control plane registers prefixes at plan-BUILD
+                # time, BEFORE the plan that writes the completing chunk has
+                # been dispatched — gathering ``self.k`` here would capture
+                # incomplete blocks. Queue the publish; ``flush_write_through``
+                # (called by the engine's post-dispatch drain) does the gather
+                # against the post-dispatch arrays.
+                self._wt_pending.extend(published)
+            else:
+                # write-through to the host tier (one batched device->host
+                # gather): a DP-shared store makes these blocks promotable on
+                # sibling replicas immediately, not only after an HBM eviction
+                ids = jnp.asarray(np.asarray([b for b, _ in published], np.int32))
+                k_np = np.asarray(jnp.take(self.k, ids, axis=1))
+                v_np = np.asarray(jnp.take(self.v, ids, axis=1))
+                for j, (_b, key) in enumerate(published):
+                    self.host_store.put(key, k_np[:, j], v_np[:, j],
+                                        owner=self.client_tag)
+
+    def flush_write_through(self) -> None:
+        """Drain queued write-through publishes (copy-engine mode only).
+
+        MUST run after the plan that completes the published chunks has been
+        dispatched: the gather then reads the step's output arrays, so the
+        captured values are the blocks' final contents regardless of when the
+        copy engine drains the host materialization. Blocks whose key was
+        forgotten in the meantime are skipped — the demotion path already
+        mirrored (or deliberately dropped) them."""
+        if not self._wt_pending or self.copy_engine is None:
+            self._wt_pending.clear()
+            return
+        pend = [(b, key) for b, key in self._wt_pending
+                if self._block_key.get(b) == key]
+        self._wt_pending = []
+        if not pend:
+            return
+        ids = jnp.asarray(np.asarray([b for b, _ in pend], np.int32))
+        kg = jnp.take(self.k, ids, axis=1)
+        vg = jnp.take(self.v, ids, axis=1)
+        store, owner = self.host_store, self.client_tag
+
+        def _publish(kg=kg, vg=vg, pend=tuple(pend)):
+            k_np, v_np = np.asarray(kg), np.asarray(vg)
+            for j, (_b, key) in enumerate(pend):
+                store.put(key, k_np[:, j], v_np[:, j], owner=owner)
+
+        self.copy_engine.submit(_publish, tag="write_through")
 
     def admit(self, seq_id: int, prompt_len: int) -> bool:
         """Length-only admission (no prefix sharing); kept for callers that

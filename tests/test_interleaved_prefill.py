@@ -67,8 +67,10 @@ def test_decode_emits_every_step_during_long_prefill():
     """The acceptance bar: a decode-active request must emit one token per
     step while a long prompt prefills — no multi-step decode stall."""
     cfg = _cfg()
+    # pipeline=False: the assertion reads out_tokens after every step(), which
+    # needs synchronous emission, not one-step-deferred materialization
     eng = GenerationEngine(cfg, max_batch=2, max_seq=256, prefill_chunk_size=16,
-                           token_budget=17)
+                           token_budget=17, pipeline=False)
     a = eng.submit(np.arange(5) % 90, max_new=40)
     for _ in range(3):
         eng.step()  # a is decoding
@@ -105,8 +107,10 @@ def test_token_budget_bounds_per_step_prefill():
     """Each step's granted prefill tokens obey the budget net of decode rows."""
     cfg = _cfg()
     budget = 24
+    # pipeline=False: per-step prefill_pos deltas only line up with step()
+    # boundaries in synchronous mode
     eng = GenerationEngine(cfg, max_batch=2, max_seq=256, prefill_chunk_size=64,
-                           token_budget=budget)
+                           token_budget=budget, pipeline=False)
     a = eng.submit(np.arange(4) % 90, max_new=30)
     eng.step()  # a prefills + emits
     b = eng.submit(np.arange(100) % 90 + 2, max_new=2)
