@@ -40,21 +40,27 @@ def make_workload(seed: int = 0, smoke: bool = False):
     return decoders, burst
 
 
-def make_engine(interleave: bool, cfg, params):
+def make_engine(interleave: bool, cfg, params, *, ragged: bool = True,
+                kernel: str = "reference"):
     eng = GenerationEngine(
         cfg, params=params, max_batch=4, max_seq=256,
         prefill_chunk_size=32, token_budget=40, interleave=interleave,
+        ragged=ragged, kernel=kernel,
     )
     # warm up every jit path (prefill chunk, fused step, decode) off the clock
     eng.submit(np.arange(40) % 300, max_new=4)
     eng.submit(np.arange(6) % 300, max_new=4)
     eng.run_until_done()
+    # the ragged layout compiles one step variant per packed length: capture
+    # all buckets at startup like a production engine, not on the clock
+    eng.warmup_step_variants()
     return eng
 
 
 def run_trial(eng, decoders, burst, lead_steps: int = 6):
     eng.finished.clear()
     steps0 = eng.stats()["steps"]
+    slot0, valid0 = eng.fused_slot_tokens, eng.fused_valid_tokens
     reqs = [eng.submit(p, max_new=m) for p, m in decoders]
     t0 = time.perf_counter()
     for _ in range(lead_steps):  # decoders are mid-generation...
@@ -64,19 +70,23 @@ def run_trial(eng, decoders, burst, lead_steps: int = 6):
     wall = time.perf_counter() - t0
     assert all(r.done for r in reqs)
     out_tokens = sum(len(r.out_tokens) for r in reqs)
+    slot = eng.fused_slot_tokens - slot0
+    valid = eng.fused_valid_tokens - valid0
     return {
         "wall_s": wall,
         "tok_per_s": out_tokens / wall,
         "steps": eng.stats()["steps"] - steps0,
+        "pad_frac": 1.0 - valid / slot if slot else 0.0,
         **latency_row(eng.latency_summary()),
     }
 
 
-def run_mode(interleave: bool, cfg, params, trials: int = 3, smoke: bool = False):
-    eng = make_engine(interleave, cfg, params)
+def run_mode(interleave: bool, cfg, params, trials: int = 3, smoke: bool = False,
+             *, ragged: bool = True, label: str = None):
+    eng = make_engine(interleave, cfg, params, ragged=ragged)
     rows = [run_trial(eng, *make_workload(seed, smoke)) for seed in range(trials)]
     med = {k: float(np.median([r[k] for r in rows])) for k in rows[0]}
-    med["mode"] = "interleaved" if interleave else "sequential"
+    med["mode"] = label or ("interleaved" if interleave else "sequential")
     med["steps"] = int(med["steps"])
     return med
 
@@ -86,10 +96,16 @@ def main(smoke: bool = False):
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     trials = 1 if smoke else 3
-    rows = [run_mode(il, cfg, params, trials, smoke) for il in (False, True)]
+    rows = [
+        run_mode(False, cfg, params, trials, smoke, label="sequential"),
+        run_mode(True, cfg, params, trials, smoke, ragged=False,
+                 label="il-padded"),
+        run_mode(True, cfg, params, trials, smoke, label="il-ragged"),
+    ]
 
-    print_table(rows, ("mode", "wall_s", "tok_per_s", "steps") + LAT_KEYS)
-    seq, il = rows
+    print_table(rows, ("mode", "wall_s", "tok_per_s", "steps", "pad_frac")
+                + LAT_KEYS)
+    seq, il_pad, il = rows
     if il["tpot_p95"] < seq["tpot_p95"]:
         print(f"\np95 TPOT: interleaved {il['tpot_p95']*1e3:.2f} ms vs "
               f"sequential {seq['tpot_p95']*1e3:.2f} ms "
@@ -97,6 +113,12 @@ def main(smoke: bool = False):
               f"concurrent long-prefill load)")
     print(f"worst inter-token gap p95: interleaved {il['gap_p95']*1e3:.2f} ms "
           f"vs sequential {seq['gap_p95']*1e3:.2f} ms")
+    print(f"fused-step padded-token fraction: "
+          f"padded layout {100 * il_pad['pad_frac']:.1f}% -> "
+          f"ragged layout {100 * il['pad_frac']:.1f}% "
+          f"(throughput {il['tok_per_s'] / il_pad['tok_per_s']:.2f}x)")
+    assert il["pad_frac"] <= 0.05, (
+        f"ragged packing must keep padding <= 5%, got {il['pad_frac']:.3f}")
 
 
 if __name__ == "__main__":

@@ -11,10 +11,12 @@ from __future__ import annotations
 
 import time
 
+import argparse
+
 try:
-    from _report import latency_row, print_latency_ms, smoke_flag
+    from _report import latency_row, print_latency_ms
 except ImportError:  # imported as a package module (benchmarks.run)
-    from benchmarks._report import latency_row, print_latency_ms, smoke_flag
+    from benchmarks._report import latency_row, print_latency_ms
 
 import jax
 import numpy as np
@@ -35,9 +37,11 @@ def make_workload(n_requests: int, ctx_len: int, tail_len: int, max_new: int, se
     return reqs
 
 
-def run_backend(backend: str, cfg, params, workload, max_batch: int, max_seq: int):
+def run_backend(backend: str, cfg, params, workload, max_batch: int,
+                max_seq: int, kernel: str = "reference"):
     eng = GenerationEngine(
-        cfg, params=params, max_batch=max_batch, max_seq=max_seq, backend=backend
+        cfg, params=params, max_batch=max_batch, max_seq=max_seq,
+        backend=backend, kernel=kernel,
     )
     # warm up jit caches (prefill buckets / chunks + decode) off the clock
     eng.submit(workload[0][0], max_new=2)
@@ -63,7 +67,7 @@ def run_backend(backend: str, cfg, params, workload, max_batch: int, max_seq: in
     }
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, kernel: str = "reference"):
     cfg = smoke_variant(get_arch("smollm-135m"))
     params = init_params(cfg, jax.random.PRNGKey(0))
     max_batch, max_seq = 4, 256
@@ -71,8 +75,12 @@ def main(smoke: bool = False):
     workload = make_workload(n_requests=n_requests, ctx_len=96, tail_len=8,
                              max_new=max_new)
 
-    rows = [run_backend(b, cfg, params, workload, max_batch, max_seq)
+    # the kernel flag only affects the paged hot path; dense stays reference
+    rows = [run_backend(b, cfg, params, workload, max_batch, max_seq,
+                        kernel=kernel if b == "paged" else "reference")
             for b in ("dense", "paged")]
+    if kernel != "reference":
+        print(f"[paged backend hot path: kernel={kernel}]")
 
     hdr = ("backend", "wall_s", "out_tok", "tok/s", "steps", "prefill_tok",
            "prefix_hits", "preempt")
@@ -94,4 +102,11 @@ def main(smoke: bool = False):
 
 
 if __name__ == "__main__":
-    main(smoke=smoke_flag(__doc__))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model / few requests: fast smoke run for CI")
+    ap.add_argument("--kernel", default="reference",
+                    choices=["reference", "pallas"],
+                    help="paged-engine hot-path attention implementation")
+    args = ap.parse_args()
+    main(smoke=args.smoke, kernel=args.kernel)

@@ -15,6 +15,21 @@ the BlockSpec index_map, so each grid cell DMAs exactly the physical block
 the logical position maps to — no contiguous cache materialization.
 ``ref_paged_decode_attention`` is the jnp gather oracle the kernel (and the
 engine's XLA decode path) are checked against.
+
+``paged_chunk_attention`` is the ragged fused-step variant: T packed query
+tokens from B sequences (decode rows and prefill chunks mixed in one flat
+buffer) each attend their own sequence's paged KV through the shared block
+table, with the segmented-prompt span mask (prelude + own segment + causal
+self) applied inside the kernel. One query token per grid row keeps the
+q tile at the decode kernel's (G, hd) shape regardless of how the batch is
+packed, so ragged layouts cost no padding FLOPs at all.
+
+Both kernels tolerate RAW block tables: pad entries (-1) are masked inside
+the kernel (index_maps clamp them to block 0 purely so the DMA has a legal
+source; the scores of those slots are forced to -inf). Callers no longer
+need to pre-clamp or reroute tables before handing them to the kernels.
+Fully-masked query rows (a packed pad token, ``row_of < 0``) produce finite
+garbage — never NaN — and must be discarded by the caller.
 """
 from __future__ import annotations
 
@@ -27,6 +42,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for the serving engine: compiled Mosaic on TPU,
+    the Pallas interpreter everywhere else (CPU CI runs the same kernel code
+    path end-to-end, just without the Mosaic lowering)."""
+    return jax.default_backend() != "tpu"
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
@@ -132,11 +154,14 @@ def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                  # (G, bs)
-    # logical position of this block's slots = j*bs + offset; valid below the
-    # sequence length (length <= allocated blocks, so a clamped -1 table entry
-    # is always fully masked)
+    # logical position of this block's slots = j*bs + offset; valid when below
+    # the sequence length AND backed by a real page — a raw -1 table entry is
+    # masked here in the kernel (the index_map clamps it to block 0 only so
+    # the DMA has a legal source), so callers may pass unclamped tables even
+    # when interior entries are holes
     kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(kpos < len_ref[bb], s, NEG_INF)
+    backed = tab_ref[bb, j] >= 0
+    s = jnp.where(backed & (kpos < len_ref[bb]), s, NEG_INF)
 
     m_prev = m_ref[...]
     m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -166,8 +191,10 @@ def paged_decode_attention(
 
     Grid (B*KVH, max_blocks): the scalar-prefetched block table feeds the
     K/V BlockSpec index_map, so each cell DMAs the one physical block its
-    logical block index maps to (unallocated entries clamp to block 0 and are
-    masked by the length check).
+    logical block index maps to. The table may be RAW: -1 entries (pad or
+    interior holes) are masked to -inf inside the kernel, independent of the
+    length check. Lengths must be >= 1 per row (a fully-masked row would
+    softmax over nothing).
     """
     B, H, hd = q.shape
     bs, KVH = k_pool.shape[1], k_pool.shape[2]
@@ -235,3 +262,179 @@ def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, scale=N
 
     out = xla_decode(q[:, None], gather(k_pool), gather(v_pool), valid, scale=scale)
     return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# packed (ragged fused-step) chunk attention
+# ---------------------------------------------------------------------------
+
+
+def _paged_chunk_kernel(tab_ref, row_ref, slot_ref, pend_ref, sstart_ref,
+                        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                        *, block_size: int, nkv: int, kvh: int, scale: float):
+    c = pl.program_id(0)   # packed token x kv-head cell
+    j = pl.program_id(1)   # logical kv block
+    t = c // kvh           # packed token index
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (G, bs)
+    # the segmented-prompt span mask (models.transformer.apply_layer_prefix):
+    # a token attends the shared prelude (slot < p_end) plus its own document
+    # segment up to itself (s_start <= slot <= own slot); flat prompts and
+    # decode rows pass p_end = s_start = 0, degenerating to plain causal.
+    # Raw -1 table entries and packed pad tokens (row_of < 0) mask to -inf.
+    kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    row = row_ref[t]
+    backed = (row >= 0) & (tab_ref[jnp.maximum(row, 0), j] >= 0)
+    span = (kpos < pend_ref[t]) | (
+        (kpos >= sstart_ref[t]) & (kpos <= slot_ref[t])
+    )
+    s = jnp.where(backed & span, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_chunk_attention(
+    q, k_pool, v_pool, block_tables, row_of, slots, p_end, s_start, *,
+    scale=None, interpret: bool = True,
+):
+    """Ragged fused-step attention: T packed query tokens over a paged pool.
+
+    q: (T, H, hd) — the flat fused batch, decode rows and prefill chunks
+    packed back to back (no chunk-width padding); k/v_pool: (n_blocks, bs,
+    KVH, hd) — ONE layer group's global pool, already holding the packed
+    chunk's own K/V (the stack writes before attention, exactly like the
+    chunked-prefill path); block_tables: (B, max_blocks) int32, RAW (-1
+    entries masked in-kernel); row_of: (T,) int32 owning batch row per token
+    (-1 = packed pad token, output garbage-but-finite, caller discards);
+    slots: (T,) absolute cache slot of each token; p_end / s_start: (T,)
+    segmented-prompt attention spans (zeros = plain causal over slots).
+    Returns (T, H, hd).
+
+    Grid (T*KVH, max_blocks): one query token per cell row keeps the q tile
+    at (G, hd) — the decode kernel's shape — so the kernel is indifferent to
+    how rows were packed; ``block_tables[row_of[t]]`` drives the K/V
+    index_map through scalar prefetch.
+    """
+    T, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    G = H // KVH
+    mb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(T, KVH, G, hd).reshape(T * KVH, G, hd)
+    tables = jnp.asarray(block_tables, jnp.int32)
+
+    def q_map(c, j, tab_ref, row_ref, slot_ref, pend_ref, sstart_ref):
+        return (c, 0, 0)
+
+    def kv_map(c, j, tab_ref, row_ref, slot_ref, pend_ref, sstart_ref):
+        row = jnp.maximum(row_ref[c // KVH], 0)
+        return (jnp.maximum(tab_ref[row, j], 0), 0, c % KVH, 0)
+
+    kernel = functools.partial(
+        _paged_chunk_kernel, block_size=bs, nkv=mb, kvh=KVH, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(T * KVH, mb),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), q_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T * KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(
+        tables, jnp.asarray(row_of, jnp.int32), jnp.asarray(slots, jnp.int32),
+        jnp.asarray(p_end, jnp.int32), jnp.asarray(s_start, jnp.int32),
+        qf, k_pool, v_pool,
+    )
+    return out.reshape(T, KVH * G, hd)
+
+
+def ref_paged_chunk_attention(q, k_pool, v_pool, block_tables, row_of, slots,
+                              p_end, s_start, scale=None):
+    """jnp gather oracle for ``paged_chunk_attention``. Gathers each ROW's
+    contiguous view once (B small slabs, not one per packed token — the
+    naive per-token gather moves T/B times more pool bytes and dominates the
+    step on gather-bound backends), scores every token against every row's
+    slab, then selects each token's own row from the score tensor. The V
+    contraction routes each token's probabilities to its own row's slab
+    (zeros elsewhere), so no per-token V view is materialized either. This
+    is also the numerics contract for the engine's packed XLA path."""
+    T, H, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    B, mb = block_tables.shape
+    S = mb * bs
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    row_of = jnp.asarray(row_of, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    p_end = jnp.asarray(p_end, jnp.int32)
+    s_start = jnp.asarray(s_start, jnp.int32)
+    rows = jnp.maximum(row_of, 0)
+    safe = jnp.maximum(tables, 0)
+
+    def gather(pool):
+        return jnp.take(pool, safe, axis=0).reshape(B, S, KVH, hd)
+
+    K, V = gather(k_pool), gather(v_pool)
+    qg = q.reshape(T, KVH, G, hd)
+    scores = jnp.einsum(
+        "tkgh,bskh->tbkgs", qg, K, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.take_along_axis(
+        scores, rows[:, None, None, None, None], axis=1
+    )[:, 0]                                           # (T, KVH, G, S)
+
+    per_tok_tables = tables[rows]                     # (T, mb) — table ints only
+    s_idx = jnp.arange(S)
+    backed = (row_of[:, None] >= 0) & (per_tok_tables[:, s_idx // bs] >= 0)
+    span = (s_idx[None] < p_end[:, None]) | (
+        (s_idx[None] >= s_start[:, None]) & (s_idx[None] <= slots[:, None])
+    )
+    valid = backed & span
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    route = (rows[:, None] == jnp.arange(B)[None]).astype(V.dtype)
+    p_full = probs.astype(V.dtype)[:, None] * route[:, :, None, None, None]
+    out = jnp.einsum(
+        "tbkgs,bskh->tkgh", p_full, V, preferred_element_type=jnp.float32
+    )
+    return out.reshape(T, H, hd).astype(q.dtype)

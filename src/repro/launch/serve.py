@@ -35,7 +35,8 @@ def serve_sim(app_name: str, rate: float, duration: float, engine: str = "patchw
 
 def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
                tp: int = 1, dp: int = 1, preempt: str = "recompute",
-               host_blocks: int = 0, pipeline: bool = True):
+               host_blocks: int = 0, pipeline: bool = True,
+               kernel: str = "reference"):
     """Serve a real reduced model with batched requests on this host.
 
     ``tp > 1`` shards the paged engine over a ("model",) mesh — TP-resident
@@ -46,7 +47,11 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
 
     ``host_blocks > 0`` attaches the host-memory block tier (shared across
     DP replicas: cross-replica doc-block promotion); ``preempt="swap"``
-    swaps preemption victims to that tier instead of recomputing them."""
+    swaps preemption victims to that tier instead of recomputing them.
+
+    ``kernel="pallas"`` runs the serving hot path (ragged fused step +
+    paged decode) on the Pallas kernels — single-device only, so it is
+    rejected when combined with ``tp``/``dp`` sharding."""
     import jax
 
     from repro.configs import get_arch, smoke_variant
@@ -58,8 +63,10 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     layout = None
     if tp > 1 or dp > 1:
         layout = ShardedPoolLayout(make_serving_mesh(tp, dp), dp_blocks=dp > 1)
+    if kernel == "pallas" and (tp > 1 or dp > 1):
+        raise SystemExit("--kernel pallas is single-device: drop --tp/--dp")
     tier = {"preempt": preempt, "host_blocks": host_blocks or None,
-            "pipeline": pipeline}
+            "pipeline": pipeline, "kernel": kernel}
     if dp > 1:
         eng = DataParallelEngineGroup(cfg, dp=dp, max_batch=4, max_seq=256,
                                       pool_layout=layout, **tier)
@@ -80,7 +87,10 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     stats = eng.stats()
     mode = "pipelined" if pipeline else "sync"
     print(f"[serve:real] {arch}: tp={tp} dp={dp} preempt={preempt} "
-          f"mode={mode} {stats['tokens_out']} tokens out")
+          f"mode={mode} kernel={kernel} {stats['tokens_out']} tokens out")
+    if "padded_token_fraction" in stats:
+        print(f"[serve:real] fused-step padding: "
+              f"{100 * stats['padded_token_fraction']:.1f}% of slot tokens")
     if "host_gap_s" in stats:
         print(f"[serve:real] host gap: {1e3 * stats['host_gap_s']:.1f}ms total "
               f"over {stats['dispatches']} dispatches "
@@ -111,6 +121,11 @@ def main(argv=None):
                     help="pool-exhaustion strategy: re-queue + re-prefill, "
                          "swap the victim's KV to the host tier, or pick "
                          "per victim from a swap-vs-recompute cost model")
+    ap.add_argument("--kernel", default="reference",
+                    choices=["reference", "pallas"],
+                    help="hot-path attention implementation: the XLA gather "
+                         "reference, or the Pallas paged kernels (interpret "
+                         "mode off-TPU; single-device only)")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="disable double-buffered dispatch (sync oracle mode: "
                          "each step materializes before the next plan builds)")
@@ -121,7 +136,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.real:
         serve_real(args.arch, tp=args.tp, dp=args.dp, preempt=args.preempt,
-                   host_blocks=args.host_blocks, pipeline=not args.no_pipeline)
+                   host_blocks=args.host_blocks, pipeline=not args.no_pipeline,
+                   kernel=args.kernel)
     else:
         serve_sim(args.app, args.rate, args.duration, args.engine, args.slo)
 

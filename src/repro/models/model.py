@@ -242,6 +242,50 @@ def prefill_chunk(cfg, params, caches, tokens, pos, positions=None,
     return logits, new_caches
 
 
+def prefill_packed(cfg, params, k_pool, v_pool, tables, tokens, row_of, slots,
+                   positions, p_end, s_start, *, block_size, null_block,
+                   impl="reference", interpret=True):
+    """Ragged fused step: T packed tokens (decode rows + prefill chunks from
+    different sequences, no chunk-width padding) run against the paged pool
+    directly. tokens/row_of/slots/positions/p_end/s_start: (T,) — see
+    ``transformer.apply_layer_paged`` for the layout contract; tables: (B,
+    mb) RAW block tables. Returns (logits (T, V), k_pool, v_pool).
+
+    ``impl="pallas"`` reads attention through ``kernels.paged_chunk_attention``
+    (scalar-prefetched block streaming); ``"reference"`` is the jnp gather
+    oracle. Both write the packed K/V into the pool before attending, so
+    the pool comes back ready for the next plan. Requires
+    ``paged_cache_supported`` (full-attention GQA, rope, period 1)."""
+    x = embed_tokens(params["embed"], tokens[None])          # (1, T, D)
+    x, k_pool, v_pool = tfm.run_stack_paged(
+        cfg, params["blocks"], x, k_pool, v_pool, tables, row_of, slots,
+        positions, p_end, s_start, block_size=block_size,
+        null_block=null_block, impl=impl, interpret=interpret,
+    )
+    x = tfm.apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], params.get("lm_head"), x, cfg.tie_embeddings)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask pad-vocab logits (as forward)
+        pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+        logits = logits + pad_bias.astype(logits.dtype)
+    return logits[0], k_pool, v_pool
+
+
+def decode_step_paged(cfg, params, k_pool, v_pool, tables, tokens, pos, *,
+                      block_size, null_block, interpret=True):
+    """Pallas-native paged decode: one new token per row attends its block
+    chain in place (``kernels.paged_decode_attention``), no contiguous view
+    gather. tokens: (B, 1); pos: (B,). Returns (logits (B, V), k_pool,
+    v_pool). Requires ``paged_cache_supported``."""
+    x = embed_tokens(params["embed"], tokens)
+    x, k_pool, v_pool = tfm.run_stack_decode_paged(
+        cfg, params["blocks"], x, k_pool, v_pool, tables, pos,
+        block_size=block_size, null_block=null_block, interpret=interpret,
+    )
+    x = tfm.apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], params.get("lm_head"), x, cfg.tie_embeddings)
+    return logits[:, 0], k_pool, v_pool
+
+
 def paged_cache_supported(cfg: ModelConfig) -> bool:
     """Whether the paged serving path (block-table decode + chunked prefill +
     prefix sharing) supports this architecture: a homogeneous full-attention

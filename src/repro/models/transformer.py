@@ -524,6 +524,172 @@ def run_stack_prefix(cfg, blocks, x, caches, pos, positions=None,
     return x, new_caches
 
 
+def apply_layer_paged(cfg, kind, lp, x, k_slice, v_slice, tables, row_of,
+                      slots, positions, p_end, s_start, *, block_size,
+                      null_block, impl="reference", interpret=True):
+    """Ragged fused-step layer: T packed tokens (decode rows and prefill
+    chunks from different sequences, back to back in one flat buffer) read
+    and write the paged pool DIRECTLY — no per-row contiguous view is ever
+    materialized, and there are no chunk-width padding rows.
+
+    x: (1, T, D); k/v_slice: (n_blocks, bs, KVH, hd) one layer group's pool;
+    tables: (B, mb) int32 RAW block tables (-1 holes allowed); row_of/slots/
+    positions/p_end/s_start: (T,) per-token owning row, absolute cache slot,
+    rope position and segment-attention span (see ``apply_layer_prefix`` —
+    the mask ``slot < p_end  OR  s_start <= slot <= own slot`` is identical,
+    applied per packed token instead of per (row, chunk-col)).
+
+    The chunk's K/V entries are scattered into the pool BEFORE attention
+    (``write_paged_packed``), mirroring the chunked-prefill path, so each
+    token's own entry — and every earlier packed token of the same row — is
+    visible to its query. ``impl`` selects the attention read: "pallas"
+    streams blocks through ``kernels.paged_chunk_attention``; "reference"
+    gathers per-token views and runs the masked-softmax oracle (the numerics
+    contract, and the path that keeps working under shard_map meshes).
+
+    Full-attention GQA stacks only, like the rest of the paged path."""
+    from repro.kernels.decode_attention import (
+        paged_chunk_attention, ref_paged_chunk_attention,
+    )
+    from repro.models.layers import apply_rope
+    from repro.serving.paged_cache import write_paged_packed
+
+    at = kind["attn_type"]
+    if at != ATTN_FULL or kind["cross"]:
+        raise NotImplementedError(
+            "ragged paged prefill supports full-attention GQA stacks only"
+        )
+    xn = apply_norm(cfg, lp["norm1"], x)
+    q, k, v = attn.qkv_project(
+        lp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    )
+    if cfg.use_rope:
+        q = apply_rope(q, positions[None], cfg.rope_theta)
+        k = apply_rope(k, positions[None], cfg.rope_theta)
+    k_slice = write_paged_packed(
+        k_slice, tables, row_of, slots, k[0], block_size, null_block
+    )
+    v_slice = write_paged_packed(
+        v_slice, tables, row_of, slots, v[0], block_size, null_block
+    )
+    if impl == "pallas":
+        a_out = paged_chunk_attention(
+            q[0], k_slice, v_slice, tables, row_of, slots, p_end, s_start,
+            interpret=interpret,
+        )
+    else:
+        a_out = ref_paged_chunk_attention(
+            q[0], k_slice, v_slice, tables, row_of, slots, p_end, s_start
+        )
+    T = x.shape[1]
+    x = x + (a_out.reshape(1, T, cfg.num_heads * cfg.head_dim)
+             @ lp["attn"]["wo"])
+
+    xn = apply_norm(cfg, lp["norm2"], x)
+    if "moe" in lp:
+        ffn_out, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
+    else:
+        ffn_out = apply_mlp(lp["mlp"], xn, cfg.act)
+    return x + ffn_out, k_slice, v_slice
+
+
+def run_stack_paged(cfg, blocks, x, k_pool, v_pool, tables, row_of, slots,
+                    positions, p_end, s_start, *, block_size, null_block,
+                    impl="reference", interpret=True):
+    """Scan the layer stack in ragged fused-step mode: x (1, T, D) packed
+    tokens against the full paged pool (G, n_blocks, bs, KVH, hd). Each scan
+    step consumes and re-emits one layer group's pool slice — the pool is
+    both the KV source and the write destination, so no separate
+    gather/extract/scatter phases exist. Returns (x, k_pool, v_pool)."""
+    p = period(cfg)
+    kinds = [layer_kind(cfg, i) for i in range(p)]
+    assert p == 1, "ragged paged path requires period-1 stacks"
+
+    def body(x, slices):
+        block_slice, k_slice, v_slice = slices
+        x, k_slice, v_slice = apply_layer_paged(
+            cfg, kinds[0], block_slice[0], x, k_slice, v_slice, tables,
+            row_of, slots, positions, p_end, s_start,
+            block_size=block_size, null_block=null_block,
+            impl=impl, interpret=interpret,
+        )
+        return x, (k_slice, v_slice)
+
+    x, (k_pool, v_pool) = jax.lax.scan(body, x, (blocks, k_pool, v_pool))
+    return x, k_pool, v_pool
+
+
+def apply_layer_decode_paged(cfg, kind, lp, x, k_slice, v_slice, tables, pos,
+                             *, block_size, null_block, interpret=True):
+    """Pallas-native paged decode layer: write the new token's K/V into the
+    pool slice, then stream the sequence's blocks through
+    ``kernels.paged_decode_attention`` — no contiguous view gather. x:
+    (B, 1, D); k/v_slice: (n_blocks, bs, KVH, hd); tables: (B, mb); pos:
+    (B,) absolute position of the new token (rows must be table-backed at
+    ``pos`` — the plan allocates before it decodes)."""
+    from repro.kernels.decode_attention import paged_decode_attention
+    from repro.models.layers import apply_rope
+
+    at = kind["attn_type"]
+    if at != ATTN_FULL or kind["cross"]:
+        raise NotImplementedError(
+            "paged pallas decode supports full-attention GQA stacks only"
+        )
+    B = x.shape[0]
+    bs = block_size
+    xn = apply_norm(cfg, lp["norm1"], x)
+    q, k, v = attn.qkv_project(
+        lp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    )
+    if cfg.use_rope:
+        positions = pos[:, None].astype(jnp.int32)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    blk = tables[jnp.arange(B), pos // bs]
+    dest = jnp.where(blk >= 0, blk * bs + pos % bs, null_block * bs)
+
+    def scatter(pool, new):
+        nb = pool.shape[0]
+        flat = pool.reshape(nb * bs, *pool.shape[2:])
+        return flat.at[dest].set(new.astype(flat.dtype)).reshape(pool.shape)
+
+    k_slice = scatter(k_slice, k[:, 0])
+    v_slice = scatter(v_slice, v[:, 0])
+    a_out = paged_decode_attention(
+        q[:, 0], k_slice, v_slice, tables, pos + 1, interpret=interpret
+    )
+    x = x + (a_out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+             @ lp["attn"]["wo"])
+
+    xn = apply_norm(cfg, lp["norm2"], x)
+    if "moe" in lp:
+        ffn_out, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
+    else:
+        ffn_out = apply_mlp(lp["mlp"], xn, cfg.act)
+    return x + ffn_out, k_slice, v_slice
+
+
+def run_stack_decode_paged(cfg, blocks, x, k_pool, v_pool, tables, pos, *,
+                           block_size, null_block, interpret=True):
+    """Scan the layer stack in pallas paged-decode mode: x (B, 1, D), pool
+    (G, n_blocks, bs, KVH, hd), per-row positions (B,). Returns
+    (x, k_pool, v_pool)."""
+    p = period(cfg)
+    kinds = [layer_kind(cfg, i) for i in range(p)]
+    assert p == 1, "paged pallas decode requires period-1 stacks"
+
+    def body(x, slices):
+        block_slice, k_slice, v_slice = slices
+        x, k_slice, v_slice = apply_layer_decode_paged(
+            cfg, kinds[0], block_slice[0], x, k_slice, v_slice, tables, pos,
+            block_size=block_size, null_block=null_block, interpret=interpret,
+        )
+        return x, (k_slice, v_slice)
+
+    x, (k_pool, v_pool) = jax.lax.scan(body, x, (blocks, k_pool, v_pool))
+    return x, k_pool, v_pool
+
+
 def run_stack_decode(cfg, blocks, x, caches, pos_scalar):
     p = period(cfg)
     kinds = [layer_kind(cfg, pos) for pos in range(p)]

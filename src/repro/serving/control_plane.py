@@ -52,21 +52,33 @@ class StepPlan:
     the runner uploads them; nothing here holds device state."""
 
     plan_id: int
-    kind: str                # "fused" (mixed decode+prefill) | "decode"
-    tokens: np.ndarray       # (B, C) int32 chunk tokens; (B, 1) for decode
+    kind: str                # "ragged" (packed mixed batch) | "fused"
+    #                          (padded mixed batch) | "decode"
+    tokens: np.ndarray       # ragged: (T,) flat packed tokens; fused: (B, C)
+    #                          chunk tokens; decode: (B, 1)
     starts: np.ndarray       # (B,) int32 per-row cursor / decode position
     temps: np.ndarray        # (B,) float32 sampling temperatures
-    tables: np.ndarray       # (B, view_blocks | max_blocks) int32 block tables
-    # rows whose col-0 token must be substituted with the PREVIOUS plan's
+    tables: np.ndarray       # (B, view_blocks | max_blocks) int32 block
+    #                          tables — RAW (-1 holes) for ragged plans,
+    #                          scratch-filled for fused/decode
+    # rows whose decode token must be substituted with the PREVIOUS plan's
     # device-resident sampled token (-1 = feed the host-provided token)
     prev_slots: np.ndarray   # (B,) int32
     # rows whose sampled token is delivered: (request, row, finishing)
     emit_rows: Tuple[Tuple[Any, int, bool], ...]
     n_tokens: int            # valid tokens this step (per-token calibration)
-    n_valid: Optional[np.ndarray] = None     # fused only: (B,) valid counts
-    positions: Optional[np.ndarray] = None   # fused only: (B, C) rope positions
-    p_end: Optional[np.ndarray] = None       # fused only: attention span ends
-    s_start: Optional[np.ndarray] = None     # fused only: attention span starts
+    n_valid: Optional[np.ndarray] = None     # mixed only: (B,) valid counts
+    positions: Optional[np.ndarray] = None   # mixed only: rope positions —
+    #                                          (T,) ragged, (B, C) fused
+    p_end: Optional[np.ndarray] = None       # mixed only: attention span ends
+    s_start: Optional[np.ndarray] = None     # mixed only: span starts
+    # ragged layout only: the packed batch's row-offset arrays
+    row_of: Optional[np.ndarray] = None      # (T,) owning batch row, -1 = pad
+    slots: Optional[np.ndarray] = None       # (T,) absolute cache slot
+    decode_idx: Optional[np.ndarray] = None  # (B,) flat index of the row's
+    #                                          decode token (-1 = not decoding)
+    last_idx: Optional[np.ndarray] = None    # (B,) flat index of the row's
+    #                                          last valid token (0 = unused row)
 
 
 class CopyEngine:
@@ -197,8 +209,10 @@ class ControlPlane:
         prev_slots = np.full((B,), -1, np.int32)
 
         if prefill_rows:
-            plan = self._assemble_fused(plan_id, active, prefill_rows,
-                                        decode_rows, prev_slots)
+            assemble = (self._assemble_ragged if eng.ragged
+                        else self._assemble_fused)
+            plan = assemble(plan_id, active, prefill_rows, decode_rows,
+                            prev_slots)
         else:
             plan = self._assemble_decode(plan_id, active, prev_slots)
 
@@ -209,12 +223,14 @@ class ControlPlane:
                 eng._retire_slot(req)
         return plan
 
-    def _assemble_fused(self, plan_id, active, prefill_rows, decode_rows,
-                        prev_slots) -> StepPlan:
+    def _grants(self, prefill_rows, decode_rows) -> Dict[int, int]:
+        """Token-budget grants: decode rows reserve one token each; the
+        remaining budget goes to mid-prefill rows in policy order (always
+        at least one token, so prefill can never fully starve). Identical
+        for the ragged and padded layouts — the plan SEQUENCE (grants,
+        bookkeeping, emissions) is layout-independent by construction,
+        which is what makes ragged-vs-padded token parity testable."""
         eng = self.eng
-        # token-budget grants: decode rows reserve one token each; the
-        # remaining budget goes to mid-prefill rows in policy order (always
-        # at least one token, so prefill can never fully starve)
         budget = max(eng.token_budget - len(decode_rows), 1)
         grants: Dict[int, int] = {}
         for r in eng.scheduler.order(prefill_rows):
@@ -223,6 +239,47 @@ class ControlPlane:
             c = min(eng._max_grant(r, eng.prefill_chunk_size), budget)
             grants[r.req_id] = c
             budget -= c
+        return grants
+
+    def _mixed_bookkeeping(self, plan_id, prefill_rows, decode_rows, grants):
+        """Build-time bookkeeping for one mixed step (the state the NEXT
+        plan reads): cursor/position advances, kv lengths, prefix
+        publication, and the emit list. Shared by both batch layouts."""
+        eng = self.eng
+        emit: List[Tuple[Any, int, bool]] = []
+        n_tok = 0
+        for r in decode_rows:
+            r.pos += 1
+            eng.kv.lengths[r.req_id] = r.pos
+            n_tok += 1
+            emit.append(self._mark_sampled(r, plan_id))
+        for r in prefill_rows:
+            c = grants.get(r.req_id, 0)
+            if c == 0:
+                continue  # no budget this step; cursor holds
+            r.prefill_pos += c
+            eng.prefill_tokens += c
+            n_tok += c
+            eng._advance_cursor(r)  # skip cache-served spans for free
+            eng.kv.lengths[r.req_id] = r.prefill_pos
+            if r.prefill_pos >= r.prefill_cap:
+                # prefill complete: publish prompt blocks; the first token
+                # samples from this plan's last-valid-position logits
+                eng.kv.register_prefix(
+                    r.req_id, np.asarray(r.prompt[: r.prefill_cap], np.int32),
+                    r.layout,
+                )
+                r.pos = r.prefill_cap
+                emit.append(self._mark_sampled(r, plan_id))
+        return emit, n_tok
+
+    def _assemble_fused(self, plan_id, active, prefill_rows, decode_rows,
+                        prev_slots) -> StepPlan:
+        """Padded mixed batch (legacy layout): every row a chunk-width slab
+        at its own cursor, decode rows one valid token in C columns. Kept as
+        the layout oracle for the ragged packing (``ragged=False``)."""
+        eng = self.eng
+        grants = self._grants(prefill_rows, decode_rows)
 
         # compose the fused batch: every row a chunk at its own cursor
         B, C = eng.max_batch, eng.prefill_chunk_size
@@ -253,37 +310,99 @@ class ControlPlane:
                 n_valid[r.slot] = 1
                 positions[r.slot, 0] = r.pos  # decoded tokens: position == slot
 
-        # ---- build-time bookkeeping (the state the NEXT plan reads)
-        emit: List[Tuple[Any, int, bool]] = []
-        n_tok = 0
-        for r in decode_rows:
-            r.pos += 1
-            eng.kv.lengths[r.req_id] = r.pos
-            n_tok += 1
-            emit.append(self._mark_sampled(r, plan_id))
-        for r in prefill_rows:
-            c = grants.get(r.req_id, 0)
-            if c == 0:
-                continue  # no budget this step; cursor holds
-            r.prefill_pos += c
-            eng.prefill_tokens += c
-            n_tok += c
-            eng._advance_cursor(r)  # skip cache-served spans for free
-            eng.kv.lengths[r.req_id] = r.prefill_pos
-            if r.prefill_pos >= r.prefill_cap:
-                # prefill complete: publish prompt blocks; the first token
-                # samples from this plan's last-valid-position logits
-                eng.kv.register_prefix(
-                    r.req_id, np.asarray(r.prompt[: r.prefill_cap], np.int32),
-                    r.layout,
-                )
-                r.pos = r.prefill_cap
-                emit.append(self._mark_sampled(r, plan_id))
+        emit, n_tok = self._mixed_bookkeeping(
+            plan_id, prefill_rows, decode_rows, grants
+        )
+        eng.fused_slot_tokens += B * C
+        eng.fused_valid_tokens += n_tok
         return StepPlan(
             plan_id=plan_id, kind="fused", tokens=tokens, starts=starts,
             temps=temps, tables=tables, prev_slots=prev_slots,
             emit_rows=tuple(emit), n_tokens=n_tok, n_valid=n_valid,
             positions=positions, p_end=p_end, s_start=s_start,
+        )
+
+    def _assemble_ragged(self, plan_id, active, prefill_rows, decode_rows,
+                         prev_slots) -> StepPlan:
+        """Packed mixed batch: one flat token buffer, rows back to back in
+        slot order — a decode row occupies ONE slot instead of a chunk-width
+        slab, so padding is only the tail alignment (``eng.pack_align``).
+        Tables stay RAW (-1 holes): the kernels/oracle mask unbacked pages
+        in the mask instead of the scratch-block reroute."""
+        eng = self.eng
+        grants = self._grants(prefill_rows, decode_rows)
+
+        B = eng.max_batch
+        toks: List[np.ndarray] = []
+        row_l: List[np.ndarray] = []
+        slot_l: List[np.ndarray] = []
+        pos_l: List[np.ndarray] = []
+        pend_l: List[np.ndarray] = []
+        sstart_l: List[np.ndarray] = []
+        starts = np.zeros((B,), np.int32)
+        n_valid = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        decode_idx = np.full((B,), -1, np.int32)
+        last_idx = np.zeros((B,), np.int32)
+        tables = np.full((B, eng._view_blocks), -1, np.int32)
+        rows = eng.kv.pool.table_array([r.req_id for r in active],
+                                       eng._view_blocks)
+        cursor = 0
+        for i, r in enumerate(active):   # slot order (eng.slots scan order)
+            tables[r.slot] = rows[i]
+            temps[r.slot] = r.temperature
+            if r.prefilling:
+                c = grants.get(r.req_id, 0)
+                starts[r.slot] = r.prefill_pos
+                n_valid[r.slot] = c
+                if c == 0:
+                    continue  # no budget: the row contributes no tokens
+                p0 = r.prefill_pos
+                toks.append(np.asarray(r.prompt[p0 : p0 + c], np.int32))
+                row_l.append(np.full(c, r.slot, np.int32))
+                slot_l.append(np.arange(p0, p0 + c, dtype=np.int32))
+                lay = r.layout
+                pos_l.append(np.asarray(lay.pos_ids[p0 : p0 + c], np.int32))
+                pend_l.append(np.asarray(lay.attn_p_end[p0 : p0 + c], np.int32))
+                sstart_l.append(np.asarray(lay.attn_s_start[p0 : p0 + c], np.int32))
+            else:
+                toks.append(np.array([self._decode_token(r, prev_slots)], np.int32))
+                row_l.append(np.array([r.slot], np.int32))
+                slot_l.append(np.array([r.pos], np.int32))
+                pos_l.append(np.array([r.pos], np.int32))
+                pend_l.append(np.zeros(1, np.int32))
+                sstart_l.append(np.zeros(1, np.int32))
+                starts[r.slot] = r.pos
+                n_valid[r.slot] = 1
+                decode_idx[r.slot] = cursor
+            last_idx[r.slot] = cursor + len(toks[-1]) - 1
+            cursor += len(toks[-1])
+
+        # tail-align the flat buffer so jit variants stay bounded; pad tokens
+        # carry row_of = -1 and are fully masked inside the attention
+        T = max(cursor, 1)
+        T_pad = -(-T // eng.pack_align) * eng.pack_align
+
+        def flat(parts, fill=0):
+            out = np.full((T_pad,), fill, np.int32)
+            if parts:
+                cat = np.concatenate(parts)
+                out[: len(cat)] = cat
+            return out
+
+        emit, n_tok = self._mixed_bookkeeping(
+            plan_id, prefill_rows, decode_rows, grants
+        )
+        eng.fused_slot_tokens += T_pad
+        eng.fused_valid_tokens += cursor
+        return StepPlan(
+            plan_id=plan_id, kind="ragged", tokens=flat(toks),
+            starts=starts, temps=temps, tables=tables, prev_slots=prev_slots,
+            emit_rows=tuple(emit), n_tokens=n_tok, n_valid=n_valid,
+            positions=flat(pos_l), p_end=flat(pend_l),
+            s_start=flat(sstart_l),
+            row_of=flat(row_l, fill=-1),
+            slots=flat(slot_l), decode_idx=decode_idx, last_idx=last_idx,
         )
 
     def _assemble_decode(self, plan_id, active, prev_slots) -> StepPlan:

@@ -41,6 +41,17 @@ def _substitute(tokens, prev, prev_slots):
     return tokens.at[:, 0].set(col0)
 
 
+def _substitute_packed(tokens, prev, prev_slots, decode_idx):
+    """Ragged-layout substitution: a decode row's single token lives at flat
+    index ``decode_idx[b]``; rows with ``prev_slots[b] >= 0`` take the
+    previous plan's device-resident sampled token. Non-substituting rows
+    scatter out of range and are dropped."""
+    T = tokens.shape[0]
+    idx = jnp.where(prev_slots >= 0, decode_idx, T)
+    vals = prev[jnp.maximum(prev_slots, 0)]
+    return tokens.at[idx].set(vals, mode="drop")
+
+
 def _is_ready(arr) -> bool:
     """True when a device array's computation has finished (best effort:
     backends without ``is_ready`` report ready, degrading the gap metric to
@@ -78,6 +89,7 @@ class DeviceRunner:
         # the cost-model preemption's recompute estimate consumes it
         self.token_time_ema: Optional[float] = None
         self._subst_jit = jax.jit(_substitute)
+        self._subst_packed_jit = jax.jit(_substitute_packed)
         self._sample_jit = jax.jit(sample_tokens)
 
     # --------------------------------------------------------------- probes
@@ -108,10 +120,21 @@ class DeviceRunner:
         eng._key, sk = jax.random.split(eng._key)
         prev = (self._last.tokens if self._last is not None
                 else jnp.zeros((eng.max_batch,), jnp.int32))
-        toks_in = self._subst_jit(
-            jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots)
-        )
-        if plan.kind == "fused":
+        if plan.kind == "ragged":
+            toks_in = self._subst_packed_jit(
+                jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots),
+                jnp.asarray(plan.decode_idx),
+            )
+            logits, eng.kv.k, eng.kv.v = eng._ragged_step_jit(
+                eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
+                toks_in, jnp.asarray(plan.row_of), jnp.asarray(plan.slots),
+                jnp.asarray(plan.positions), jnp.asarray(plan.p_end),
+                jnp.asarray(plan.s_start), jnp.asarray(plan.last_idx),
+            )
+        elif plan.kind == "fused":
+            toks_in = self._subst_jit(
+                jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots)
+            )
             logits, eng.kv.k, eng.kv.v = eng._fused_step_jit(
                 eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
                 toks_in, jnp.asarray(plan.starts), jnp.asarray(plan.n_valid),
@@ -119,7 +142,10 @@ class DeviceRunner:
                 jnp.asarray(plan.s_start),
             )
         else:
-            logits, eng.kv.k, eng.kv.v = eng._decode_paged_jit(
+            toks_in = self._subst_jit(
+                jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots)
+            )
+            logits, eng.kv.k, eng.kv.v = eng._decode_dispatch_jit(
                 eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
                 toks_in, jnp.asarray(plan.starts),
             )

@@ -89,13 +89,16 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import QueuePolicy, make_policy
 from repro.core.streaming import PriorityFlusher, StreamingObject
+from repro.kernels.decode_attention import default_interpret
 from repro.models import (
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_params,
     paged_cache_supported,
     prefill_chunk,
+    prefill_packed,
 )
 from repro.serving.control_plane import ControlPlane, CopyEngine
 from repro.serving.device_runner import DeviceRunner, PlanExec
@@ -245,6 +248,9 @@ class GenerationEngine:
         host_bw_bytes_s: float = 8e9,
         copy_budget: int = 4,
         telemetry: Any = None,
+        kernel: str = "reference",
+        ragged: bool = True,
+        pack_align: int = 4,
     ):
         """``mesh`` / ``pool_layout`` shard the paged backend over a device
         mesh: params become TP-resident (Megatron layout, embed/lm_head
@@ -271,6 +277,20 @@ class GenerationEngine:
         ``pipeline`` (interleaved paged mode only) defers sampled-token
         materialization one step so plan N+1 is built while step N runs;
         ``pipeline=False`` is the eager sync oracle, greedy-token-identical.
+
+        ``kernel`` selects the paged hot-path attention implementation:
+        ``"reference"`` (default) is the jnp gather oracle; ``"pallas"``
+        runs ``kernels.paged_decode_attention`` for decode plans and
+        ``kernels.paged_chunk_attention`` for the ragged fused step —
+        compiled Mosaic on TPU, interpret mode elsewhere. ``ragged``
+        (interleaved mode) packs the fused mixed batch into one flat token
+        buffer (decode rows cost one slot, not a chunk-width row; tables go
+        to the device RAW, unbacked pages masked in the kernel);
+        ``ragged=False`` keeps the legacy chunk-width padded layout as the
+        packing oracle. ``pack_align`` rounds the flat buffer length to
+        bound jit retraces. ``kernel="pallas"`` is single-device only (the
+        Pallas calls don't partition under shard_map meshes yet) and
+        requires the ragged layout for fused steps.
         ``flusher`` shares one PriorityFlusher across engines (DP groups);
         ``host_bw_bytes_s`` calibrates the cost model's swap estimate;
         ``copy_budget`` bounds per-step async copy draining; ``telemetry``
@@ -312,6 +332,27 @@ class GenerationEngine:
         if preempt not in ("recompute", "swap", "cost"):
             raise ValueError(f"unknown preempt strategy {preempt!r}")
         self.preempt = preempt
+        if kernel not in ("reference", "pallas"):
+            raise ValueError(f"unknown kernel {kernel!r}")
+        if kernel == "pallas" and (pool_layout is not None or mesh is not None):
+            raise ValueError(
+                "kernel='pallas' is single-device only: the Pallas paged "
+                "kernels do not partition under shard_map meshes yet"
+            )
+        if kernel == "pallas" and not ragged:
+            raise ValueError(
+                "kernel='pallas' requires the ragged fused layout: the "
+                "chunk kernel consumes the packed token buffer"
+            )
+        self.kernel = kernel
+        self.ragged = bool(ragged)
+        self.pack_align = max(int(pack_align), 1)
+        self._interpret = default_interpret()
+        # fused-batch occupancy: device slots dispatched vs slots holding a
+        # real token — 1 - valid/slot is the padding-FLOP fraction the
+        # ragged layout exists to remove
+        self.fused_slot_tokens = 0
+        self.fused_valid_tokens = 0
         self.host_store = host_store
         self.pipeline = bool(pipeline) and self.interleave
         self.flusher = flusher if flusher is not None else PriorityFlusher()
@@ -381,10 +422,18 @@ class GenerationEngine:
                 self._decode_paged_jit = jax.jit(self._decode_paged_fn, out_shardings=out_s)
                 self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn, out_shardings=out_s)
                 self._fused_step_jit = jax.jit(self._fused_step_fn, out_shardings=out_s)
+                self._ragged_step_jit = jax.jit(self._ragged_step_fn, out_shardings=out_s)
             else:
                 self._decode_paged_jit = jax.jit(self._decode_paged_fn)
                 self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn)
                 self._fused_step_jit = jax.jit(self._fused_step_fn)
+                self._ragged_step_jit = jax.jit(self._ragged_step_fn)
+            if kernel == "pallas":
+                # pallas decode replaces the gather-oracle program wholesale;
+                # the oracle jit stays live for parity runs and audits
+                self._decode_dispatch_jit = jax.jit(self._decode_pallas_fn)
+            else:
+                self._decode_dispatch_jit = self._decode_paged_jit
         else:
             self.pool_layout = None
             self.cache = init_cache(cfg, max_batch, max_seq)
@@ -455,6 +504,14 @@ class GenerationEngine:
             s["measured_host_hit_rate"] = self.measured_host_hit_rate()
             s["tp_degree"] = self.pool_layout.tp_degree if self.pool_layout else 1
             s["preempt"] = self.preempt
+            s["kernel"] = self.kernel
+            s["ragged"] = self.ragged
+            s["fused_slot_tokens"] = self.fused_slot_tokens
+            s["fused_valid_tokens"] = self.fused_valid_tokens
+            s["padded_token_fraction"] = (
+                1.0 - self.fused_valid_tokens / self.fused_slot_tokens
+                if self.fused_slot_tokens else 0.0
+            )
             s["swap_outs"] = self.swap_outs
             s["swap_ins"] = self.swap_ins
             s["swap_reshared_blocks"] = self.swap_reshared_blocks
@@ -467,6 +524,43 @@ class GenerationEngine:
             if self.host_store is not None:
                 s["host_store"] = self.host_store.stats()
         return s
+
+    def warmup_step_variants(self) -> int:
+        """Pre-compile every packed fused-step variant off the serving clock.
+
+        The ragged layout trades the padded slab's single static shape for
+        one jit variant per tail-aligned packed length; a production engine
+        captures those buckets at startup rather than paying compiles
+        mid-serve (the padding-FLOP win only shows once the variants are
+        warm). The packed length is bounded by the token budget — decode
+        rows displace prefill grants one for one (with the +1 floor grant)
+        — and by the padded slab, so the sweep is small. Each dummy call
+        packs only masked pad tokens (``row_of = -1``) and its pool outputs
+        are discarded, leaving engine state untouched. Returns the number
+        of variants compiled."""
+        if self.backend != "paged" or not self.interleave or not self.ragged:
+            return 0
+        B, C = self.max_batch, self.prefill_chunk_size
+        budget = self.token_budget or B * C
+        cap = min(max(budget + 1, B + 1), B * C)
+        cap_pad = -(-cap // self.pack_align) * self.pack_align
+        tables = jnp.full((B, self._view_blocks), -1, jnp.int32)
+        li = jnp.zeros((B,), jnp.int32)
+        n = 0
+        prev = jnp.zeros((B,), jnp.int32)
+        no_slot = jnp.full((B,), -1, jnp.int32)
+        for T in range(self.pack_align, cap_pad + 1, self.pack_align):
+            z = jnp.zeros((T,), jnp.int32)
+            pad = jnp.full((T,), -1, jnp.int32)
+            out = self._ragged_step_jit(
+                self.params, self.kv.k, self.kv.v, tables, z, pad, z, z, z,
+                z, li,
+            )
+            # the runner's packed prev-token substitution is per-length too
+            self.runner._subst_packed_jit(z, prev, no_slot, li)
+            jax.block_until_ready(out[0])
+            n += 1
+        return n
 
     def audit_collectives(self, which: str = "fused") -> Dict[str, int]:
         """Compile one of the engine's step programs against representative
@@ -487,10 +581,23 @@ class GenerationEngine:
         n_valid = jnp.ones((B,), jnp.int32)
         seg = jnp.zeros((B, C), jnp.int32)
         if which == "fused":
-            tables = jnp.full((B, self._view_blocks), self._null_block, jnp.int32)
-            lowered = self._fused_step_jit.lower(
-                self.params, k, v, tables, tokens, starts, n_valid, seg, seg, seg
-            )
+            if self.ragged:
+                # the production mixed-batch program is the ragged step now;
+                # audit it against a representative packed buffer
+                T = -(-(B * C) // self.pack_align) * self.pack_align
+                flat = jnp.zeros((T,), jnp.int32)
+                tables = jnp.full((B, self._view_blocks), -1, jnp.int32)
+                lowered = self._ragged_step_jit.lower(
+                    self.params, k, v, tables, flat, flat, flat, flat, flat,
+                    flat, jnp.zeros((B,), jnp.int32)
+                )
+            else:
+                tables = jnp.full((B, self._view_blocks), self._null_block,
+                                  jnp.int32)
+                lowered = self._fused_step_jit.lower(
+                    self.params, k, v, tables, tokens, starts, n_valid,
+                    seg, seg, seg
+                )
         elif which == "decode":
             tables = jnp.full((B, self.max_blocks), self._null_block, jnp.int32)
             lowered = self._decode_paged_jit.lower(
@@ -856,6 +963,35 @@ class GenerationEngine:
         )
         return logits[b, jnp.maximum(n_valid - 1, 0)], k_pool, v_pool
 
+    def _ragged_step_fn(self, params, k_pool, v_pool, tables, tokens, row_of,
+                        slots, positions, p_end, s_start, last_idx):
+        """One ragged fused step: T packed tokens (flat buffer, no
+        chunk-width padding) read and write the pool directly through RAW
+        block tables — ``models.prefill_packed`` scatters each token's K/V
+        before attending, and unbacked pages are masked inside the
+        attention (kernel or oracle, per ``self.kernel``) instead of being
+        rerouted to the scratch block. Returns each row's last-valid-token
+        logits, gathered by ``last_idx`` so the sampler keeps its (B,)
+        contract."""
+        logits, k_pool, v_pool = prefill_packed(
+            self.cfg, params, k_pool, v_pool, tables, tokens, row_of, slots,
+            positions, p_end, s_start, block_size=self.block_size,
+            null_block=self._null_block, impl=self.kernel,
+            interpret=self._interpret,
+        )
+        return logits[last_idx], k_pool, v_pool
+
+    def _decode_pallas_fn(self, params, k_pool, v_pool, tables, tokens, pos):
+        """Pallas-native batched decode: scatter the new token's K/V, then
+        stream each row's block chain through ``paged_decode_attention`` —
+        no contiguous view is ever materialized (the gather oracle
+        ``_decode_paged_fn`` remains the numerics contract)."""
+        return decode_step_paged(
+            self.cfg, params, k_pool, v_pool, tables, tokens, pos,
+            block_size=self.block_size, null_block=self._null_block,
+            interpret=self._interpret,
+        )
+
     def _decode_paged_fn(self, params, k_pool, v_pool, tables, tokens, pos):
         """Batched block-table decode: gather each slot's contiguous view
         (the jnp gather oracle of kernels.decode_attention), run the shared
@@ -1191,7 +1327,7 @@ class GenerationEngine:
             for i, r in enumerate(active):
                 valid = rows[i] >= 0
                 tables[r.slot, valid] = rows[i][valid]
-            logits, self.kv.k, self.kv.v = self._decode_paged_jit(
+            logits, self.kv.k, self.kv.v = self._decode_dispatch_jit(
                 self.params, self.kv.k, self.kv.v,
                 jnp.asarray(tables), jnp.asarray(tokens), jnp.asarray(pos),
             )

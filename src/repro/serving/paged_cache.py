@@ -252,6 +252,28 @@ def write_paged_chunk_batch(pool_kv, block_tables, starts, new_kv, block_size: i
     return flat.reshape(pool_kv.shape)
 
 
+def write_paged_packed(pool_kv, block_tables, row_of, slots, new_kv,
+                       block_size: int, null_dest: int = 0):
+    """Ragged fused-step scatter: write T packed tokens' K/V entries straight
+    into the pool, each through its owning row's block table.
+
+    pool_kv: (n_blocks, bs, KVH, hd) — ONE layer group's pool slice (no G
+    axis; the stack scan supplies per-group slices); block_tables: (B, mb)
+    int32, RAW (-1 allowed); row_of/slots: (T,) owning batch row (-1 = packed
+    pad token) and absolute cache slot per token; new_kv: (T, KVH, hd).
+    Pad tokens and writes landing on unbacked table entries are routed to
+    slot 0 of the ``null_dest`` scratch block (racy duplicates are fine —
+    nothing ever reads the scratch block)."""
+    nb, bs = pool_kv.shape[0], pool_kv.shape[1]
+    tables = jnp.asarray(block_tables, jnp.int32)
+    blk = tables[jnp.maximum(row_of, 0), slots // bs]          # (T,)
+    dest = jnp.where(
+        (row_of >= 0) & (blk >= 0), blk * bs + slots % bs, null_dest * bs
+    )
+    flat = pool_kv.reshape(nb * bs, *pool_kv.shape[2:])
+    return flat.at[dest].set(new_kv.astype(flat.dtype)).reshape(pool_kv.shape)
+
+
 def gather_paged(pool_kv, block_table_row, max_blocks: int):
     """Materialize a sequence's contiguous cache view from its pages:
     (G, max_blocks*block_size, KVH, hd). Unallocated pages read block 0 and

@@ -25,7 +25,7 @@ def _engine(**kw):
 
 # --------------------------------------------------------------- StepPlan
 def test_build_plan_fused_shape_and_grants():
-    eng = _engine()
+    eng = _engine(ragged=False)
     a = eng.submit(np.arange(4) % 90, max_new=8)          # short: completes
     b = eng.submit(np.arange(40) % 90 + 1, max_new=2)     # long: mid-prefill
     plan = eng.control.build_plan()
@@ -45,8 +45,37 @@ def test_build_plan_fused_shape_and_grants():
     assert a.out_tokens == [] and not a.done
 
 
+def test_build_plan_ragged_shape_and_grants():
+    eng = _engine()  # ragged is the default layout
+    a = eng.submit(np.arange(4) % 90, max_new=8)          # short: completes
+    b = eng.submit(np.arange(40) % 90 + 1, max_new=2)     # long: mid-prefill
+    plan = eng.control.build_plan()
+    assert plan is not None and plan.kind == "ragged"
+    # flat packed layout: one axis, padded up to pack_align
+    assert plan.tokens.ndim == 1
+    assert plan.tokens.shape[0] % eng.pack_align == 0
+    assert plan.tokens.shape == plan.row_of.shape == plan.slots.shape
+    assert plan.tokens.shape == plan.positions.shape
+    assert plan.tokens.dtype == np.int32 and plan.tables.dtype == np.int32
+    # grants and bookkeeping are layout-independent
+    assert a.prefill_pos == 4 and a.pos == 4
+    emitted = {r.req_id for r, _row, _fin in plan.emit_rows}
+    assert a.req_id in emitted and b.req_id not in emitted
+    assert 0 < b.prefill_pos < len(b.prompt)
+    assert plan.n_tokens <= eng.token_budget
+    assert int(plan.n_valid.sum()) == plan.n_tokens
+    # valid entries map to real slots; padding rows carry row_of == -1
+    valid = int((plan.row_of >= 0).sum())
+    assert valid == plan.n_tokens
+    assert np.all(plan.row_of[valid:] == -1)
+    # each emitting row's sampling index points at its own slot's tokens
+    for req, row, _fin in plan.emit_rows:
+        assert plan.row_of[plan.last_idx[row]] == row
+    assert a.out_tokens == [] and not a.done
+
+
 def test_build_plan_marks_device_resident_prev_tokens():
-    eng = _engine()
+    eng = _engine(ragged=False)
     r = eng.submit(np.arange(4) % 90, max_new=8)
     eng.step()  # plan 0 dispatched: r's first token lives on device
     plan = eng.control.build_plan()
@@ -56,6 +85,24 @@ def test_build_plan_marks_device_resident_prev_tokens():
     assert plan.prev_slots[r.slot] == r.slot
     assert plan.tokens[r.slot, 0] == 0  # placeholder, substituted on device
     # build-time bookkeeping advanced the position for the next plan
+    assert r.pos == 5 and eng.kv.lengths[r.req_id] == 5
+
+
+def test_build_plan_ragged_marks_device_resident_prev_tokens():
+    eng = _engine()
+    r = eng.submit(np.arange(4) % 90, max_new=8)
+    eng.step()  # plan 0 dispatched: r's first token lives on device
+    # a fresh prefill joins, so the next plan is a MIXED ragged batch
+    # (decode-only plans keep the dedicated "decode" kind and dense layout)
+    eng.submit(np.arange(12) % 90 + 1, max_new=2)
+    plan = eng.control.build_plan()
+    assert plan is not None and plan.kind == "ragged"
+    # the decode token's flat index is advertised via decode_idx so the
+    # runner can substitute the device-resident sample in the packed buffer
+    di = int(plan.decode_idx[r.slot])
+    assert di >= 0 and plan.prev_slots[r.slot] == r.slot
+    assert plan.tokens[di] == 0        # placeholder, substituted on device
+    assert plan.row_of[di] == r.slot and plan.positions[di] == r.pos - 1
     assert r.pos == 5 and eng.kv.lengths[r.req_id] == 5
 
 

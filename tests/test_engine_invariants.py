@@ -16,7 +16,8 @@ def _cfg():
 
 def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
                   long_decode: bool = False, preempt: str = "recompute",
-                  pipeline: bool = True):
+                  pipeline: bool = True, kernel: str = "reference",
+                  ragged: bool = True):
     """Bursty seeded workload: waves of submits interleaved with engine steps.
     Prompts mix fresh random sequences with shared-retrieved-context prefixes
     (32 tokens = 2 full blocks at block_size=16). ``long_decode`` makes
@@ -27,7 +28,7 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
         _cfg(), max_batch=3, max_seq=96, n_blocks=n_blocks,
         prefill_chunk_size=16, token_budget=20,
         scheduler=scheduler, interleave=interleave, preempt=preempt,
-        pipeline=pipeline,
+        pipeline=pipeline, kernel=kernel, ragged=ragged,
     )
     ctx = rng.integers(0, 90, size=32).astype(np.int32)
     reqs = []
@@ -163,3 +164,151 @@ def test_pipelined_matches_sync_oracle(seed, n_blocks, preempt, scheduler,
     assert summ["dispatches"] > 0
     lat = pip_eng.latency_summary()
     assert "host_gap_total_s" in lat and "dispatches" in lat
+
+
+# --------------------------------------------------------- Pallas hot path
+@pytest.mark.parametrize(
+    "seed,n_blocks,scheduler,long_decode,preempt,pipeline",
+    [
+        (2, 8, "fifo", False, "recompute", True),   # tiny pool backpressure
+        (5, 6, "fifo", True, "swap", True),         # preemption + swap tier
+    ],
+)
+def test_pallas_kernel_matches_reference(seed, n_blocks, scheduler,
+                                         long_decode, preempt, pipeline):
+    """``kernel="pallas"`` swaps the decode dispatch and the fused step onto
+    the Pallas kernels (interpret mode off-TPU). Greedy/sampled tokens must
+    be bit-identical to the reference XLA path on the invariant-harness
+    workloads — including across swap preemption and pipelined dispatch —
+    and the pool must drain clean."""
+    ref_eng, ref_reqs = _run_workload(
+        seed, n_blocks=n_blocks, scheduler=scheduler, interleave=True,
+        long_decode=long_decode, preempt=preempt, pipeline=pipeline,
+        kernel="reference")
+    pal_eng, pal_reqs = _run_workload(
+        seed, n_blocks=n_blocks, scheduler=scheduler, interleave=True,
+        long_decode=long_decode, preempt=preempt, pipeline=pipeline,
+        kernel="pallas")
+    assert pal_eng.kernel == "pallas" and pal_eng.ragged
+    if long_decode:
+        assert pal_eng.preemptions >= 1
+    for a, b in zip(ref_reqs, pal_reqs):
+        assert a.out_tokens == b.out_tokens, (a.req_id, a.out_tokens, b.out_tokens)
+    assert all(r.done for r in pal_reqs)
+    pool = pal_eng.kv.pool
+    assert pool.n_free == pool.n_blocks - 1  # zero leaked blocks
+
+
+def test_pallas_kernel_rejects_unsupported_modes():
+    from repro.configs import get_arch, smoke_variant
+    cfg = smoke_variant(get_arch("smollm-135m"))
+    with pytest.raises(ValueError):
+        GenerationEngine(cfg, kernel="pallas", ragged=False)
+    with pytest.raises(ValueError):
+        GenerationEngine(cfg, kernel="mosaic-gpu")
+
+
+# ----------------------------------------------- ragged layout round-trip
+def _unpack_ragged(plan, B):
+    """Pure-numpy unpacker: rebuild each row's chunk from the flat packed
+    buffer. Validates the packing invariants on the way: rows are contiguous
+    runs in slot order, pad tokens carry row_of == -1, and a decode row's
+    advertised flat index points at its own single token."""
+    row_of = np.asarray(plan.row_of)
+    assert plan.tokens.shape == row_of.shape == plan.slots.shape
+    n_valid_total = int((row_of >= 0).sum())
+    assert np.all(row_of[n_valid_total:] == -1), "pads must be a tail run"
+    out = {}
+    for b in range(B):
+        idx = np.nonzero(row_of == b)[0]
+        if len(idx) == 0:
+            continue
+        assert np.array_equal(idx, np.arange(idx[0], idx[0] + len(idx)))
+        out[b] = {
+            "tokens": np.asarray(plan.tokens)[idx],
+            "slots": np.asarray(plan.slots)[idx],
+            "positions": np.asarray(plan.positions)[idx],
+            "p_end": np.asarray(plan.p_end)[idx],
+            "s_start": np.asarray(plan.s_start)[idx],
+            "flat0": int(idx[0]),
+        }
+        if plan.decode_idx[b] >= 0:
+            assert len(idx) == 1 and plan.decode_idx[b] == idx[0]
+        assert plan.last_idx[b] == idx[-1]
+    return out
+
+
+def _capture_plans(eng):
+    plans = []
+    orig = eng.control.build_plan
+
+    def wrapped():
+        p = orig()
+        if p is not None:
+            plans.append(p)
+        return p
+
+    eng.control.build_plan = wrapped
+    return plans
+
+
+@pytest.mark.parametrize("seed,n_blocks", [(0, None), (2, 8)])
+def test_ragged_plan_round_trips_to_padded_layout(seed, n_blocks):
+    """The packed layout is a pure re-encoding: a numpy unpacker applied to
+    every ragged StepPlan must reconstruct exactly the per-row chunks the
+    padded assembler emits for the same workload, step for step — and the
+    drained token outputs must be bit-identical."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 90, size=int(rng.integers(3, 40)))
+               for _ in range(6)]
+    max_new = [int(rng.integers(2, 9)) for _ in prompts]
+
+    def run(ragged):
+        eng = GenerationEngine(
+            _cfg(), max_batch=3, max_seq=96, n_blocks=n_blocks,
+            prefill_chunk_size=16, token_budget=20, ragged=ragged,
+        )
+        plans = _capture_plans(eng)
+        reqs = [eng.submit(p, max_new=m) for p, m in zip(prompts, max_new)]
+        eng.run_until_done(max_steps=1000)
+        return eng, reqs, plans
+
+    rag_eng, rag_reqs, rag_plans = run(True)
+    pad_eng, pad_reqs, pad_plans = run(False)
+
+    assert len(rag_plans) == len(pad_plans)
+    saw_ragged = False
+    for rp, fp in zip(rag_plans, pad_plans):
+        if fp.kind == "decode":       # decode-only plans share one assembler
+            assert rp.kind == "decode"
+            np.testing.assert_array_equal(rp.tokens, fp.tokens)
+            np.testing.assert_array_equal(rp.tables, fp.tables)
+            continue
+        assert rp.kind == "ragged" and fp.kind == "fused"
+        saw_ragged = True
+        # the packed buffer never exceeds the padded slab, and its tail
+        # alignment is the only padding
+        assert rp.tokens.shape[0] <= fp.tokens.shape[0] * fp.tokens.shape[1]
+        assert rp.tokens.shape[0] % rag_eng.pack_align == 0
+        np.testing.assert_array_equal(rp.n_valid, fp.n_valid)
+        np.testing.assert_array_equal(rp.starts, fp.starts)
+        chunks = _unpack_ragged(rp, rag_eng.max_batch)
+        for b in range(rag_eng.max_batch):
+            nv = int(fp.n_valid[b])
+            if nv == 0:
+                assert b not in chunks
+                continue
+            ch = chunks[b]
+            np.testing.assert_array_equal(ch["tokens"], fp.tokens[b, :nv])
+            np.testing.assert_array_equal(ch["positions"], fp.positions[b, :nv])
+            np.testing.assert_array_equal(ch["p_end"], fp.p_end[b, :nv])
+            np.testing.assert_array_equal(ch["s_start"], fp.s_start[b, :nv])
+            np.testing.assert_array_equal(
+                ch["slots"], np.arange(fp.starts[b], fp.starts[b] + nv))
+    assert saw_ragged, "workload never produced a mixed/prefill plan"
+
+    for a, b in zip(rag_reqs, pad_reqs):
+        assert a.out_tokens == b.out_tokens, (a.req_id, a.out_tokens, b.out_tokens)
+    # the packed layout actually removed padding work
+    assert rag_eng.stats()["padded_token_fraction"] < \
+        pad_eng.stats()["padded_token_fraction"]

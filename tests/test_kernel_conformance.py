@@ -1,0 +1,221 @@
+"""Kernel conformance suite: the Pallas hot-path kernels against jnp oracles.
+
+Seeded property sweeps drive ``paged_decode_attention`` and
+``paged_chunk_attention`` through randomized shapes and the edge geometry the
+serving engine actually produces — length-1 rows, block-boundary-exact
+lengths, single- and multi-block tables, ragged decode+prefill mixes,
+RAW block tables with -1 pad entries (and interior holes), packed pad tokens,
+and non-power-of-two head dims. Every case runs in interpret mode (the CPU CI
+path); a mirrored compiled-mode sweep runs only where Mosaic lowering exists
+(TPU) and is skipped elsewhere.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (
+    paged_chunk_attention,
+    paged_decode_attention,
+    ref_paged_chunk_attention,
+    ref_paged_decode_attention,
+)
+
+ON_TPU = jax.default_backend() == "tpu"
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ builders
+def _make_pool(rng, n_blocks, bs, kvh, hd):
+    k = rng.standard_normal((n_blocks, bs, kvh, hd)).astype(np.float32)
+    v = rng.standard_normal((n_blocks, bs, kvh, hd)).astype(np.float32)
+    return jnp.asarray(k), jnp.asarray(v)
+
+
+def _make_tables(rng, lengths, bs, mb, n_blocks, holes=False):
+    """RAW tables: -1 beyond each row's allocated blocks; optionally punch an
+    interior hole (an unbacked page BELOW the length) to exercise the
+    in-kernel -1 masking, not just tail padding."""
+    B = len(lengths)
+    tables = np.full((B, mb), -1, np.int32)
+    free = list(rng.permutation(n_blocks))
+    for b, ln in enumerate(lengths):
+        need = -(-ln // bs) if ln else 0
+        for j in range(need):
+            tables[b, j] = free.pop()
+        if holes and need > 2:
+            tables[b, rng.integers(1, need - 1)] = -1
+    return tables
+
+
+def _decode_case(rng, *, B, kvh, g, hd, bs, mb, n_blocks, lengths=None,
+                 holes=False):
+    lengths = (np.asarray(lengths, np.int32) if lengths is not None
+               else rng.integers(1, mb * bs + 1, size=B).astype(np.int32))
+    kp, vp = _make_pool(rng, n_blocks, bs, kvh, hd)
+    tables = _make_tables(rng, lengths, bs, mb, n_blocks, holes=holes)
+    q = jnp.asarray(rng.standard_normal((B, kvh * g, hd)).astype(np.float32))
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(lengths)
+
+
+def _chunk_case(rng, *, B, kvh, g, hd, bs, mb, n_blocks, pad_tokens=0,
+                segmented=False):
+    """A ragged fused batch: each row is either a decode token or a prefill
+    chunk at a random start offset; optional packed pad tokens (row_of=-1)
+    and segmented-prompt spans (prelude + own-segment attention)."""
+    lengths = rng.integers(1, mb * bs + 1, size=B).astype(np.int32)
+    kp, vp = _make_pool(rng, n_blocks, bs, kvh, hd)
+    tables = _make_tables(rng, lengths, bs, mb, n_blocks)
+    row_of, slots, p_end, s_start = [], [], [], []
+    for b, ln in enumerate(lengths):
+        if rng.random() < 0.4 or ln < 3:          # decode row: one token
+            row_of.append(b)
+            slots.append(int(ln) - 1)
+            p_end.append(0)
+            s_start.append(0)
+        else:                                      # prefill chunk
+            c = int(rng.integers(1, min(int(ln), 6) + 1))
+            p0 = int(ln) - c
+            for s in range(p0, p0 + c):
+                row_of.append(b)
+                slots.append(s)
+                if segmented and p0 > 1:
+                    pe = int(rng.integers(1, p0 + 1))
+                    p_end.append(pe)
+                    s_start.append(int(rng.integers(pe, s + 1)))
+                else:
+                    p_end.append(0)
+                    s_start.append(0)
+    for _ in range(pad_tokens):
+        row_of.append(-1)
+        slots.append(0)
+        p_end.append(0)
+        s_start.append(0)
+    T = len(row_of)
+    q = jnp.asarray(rng.standard_normal((T, kvh * g, hd)).astype(np.float32))
+    mk = lambda xs: jnp.asarray(np.asarray(xs, np.int32))
+    return (q, kp, vp, jnp.asarray(tables), mk(row_of), mk(slots),
+            mk(p_end), mk(s_start))
+
+
+def _assert_decode_matches(case, interpret):
+    q, kp, vp, tables, lengths = case
+    got = paged_decode_attention(q, kp, vp, tables, lengths,
+                                 interpret=interpret)
+    want = ref_paged_decode_attention(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def _assert_chunk_matches(case, interpret):
+    q, kp, vp, tables, row_of, slots, p_end, s_start = case
+    got = paged_chunk_attention(q, kp, vp, tables, row_of, slots, p_end,
+                                s_start, interpret=interpret)
+    want = ref_paged_chunk_attention(q, kp, vp, tables, row_of, slots, p_end,
+                                     s_start)
+    valid = np.asarray(row_of) >= 0
+    got, want = np.asarray(got), np.asarray(want)
+    assert np.all(np.isfinite(got)), "pad rows must be garbage-but-FINITE"
+    np.testing.assert_allclose(got[valid], want[valid], **TOL)
+
+
+# ------------------------------------------------- decode: seeded shape sweep
+@pytest.mark.parametrize("seed", range(4))
+def test_paged_decode_random_shapes(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        kvh = int(rng.choice([1, 2, 3]))
+        g = int(rng.choice([1, 2, 4]))
+        hd = int(rng.choice([16, 32, 48]))   # 48: non-power-of-two head dim
+        bs = int(rng.choice([4, 8, 16]))
+        mb = int(rng.integers(1, 5))
+        case = _decode_case(rng, B=int(rng.integers(1, 5)), kvh=kvh, g=g,
+                            hd=hd, bs=bs, mb=mb, n_blocks=4 * mb + 4)
+        _assert_decode_matches(case, interpret=True)
+
+
+@pytest.mark.parametrize("lengths", [
+    [1],                  # length-1: a single valid slot
+    [8, 16],              # block-boundary exact (bs=8)
+    [3, 8, 5],            # single-block rows under a multi-block table
+    [24, 17, 9, 1],       # multi-block, boundary, interior, minimal
+])
+def test_paged_decode_edge_lengths(lengths):
+    rng = np.random.default_rng(hash(tuple(lengths)) % 2**32)
+    case = _decode_case(rng, B=len(lengths), kvh=2, g=2, hd=32, bs=8,
+                        mb=3, n_blocks=16, lengths=lengths)
+    _assert_decode_matches(case, interpret=True)
+
+
+def test_paged_decode_raw_table_with_holes():
+    """Regression: tables reach the kernel UNCLAMPED — tail -1 pads and
+    interior -1 holes must be masked inside the kernel, not by the caller."""
+    rng = np.random.default_rng(7)
+    case = _decode_case(rng, B=3, kvh=2, g=2, hd=32, bs=4, mb=6,
+                        n_blocks=24, lengths=[24, 20, 24], holes=True)
+    q, kp, vp, tables, lengths = case
+    assert (np.asarray(tables) == -1).any()
+    _assert_decode_matches(case, interpret=True)
+
+
+# -------------------------------------------------- chunk: seeded shape sweep
+@pytest.mark.parametrize("seed", range(4))
+def test_paged_chunk_random_mixes(seed):
+    rng = np.random.default_rng(100 + seed)
+    for _ in range(2):
+        kvh = int(rng.choice([1, 2]))
+        g = int(rng.choice([1, 2, 4]))
+        hd = int(rng.choice([16, 32, 48]))
+        bs = int(rng.choice([4, 8]))
+        mb = int(rng.integers(1, 4))
+        case = _chunk_case(rng, B=int(rng.integers(1, 4)), kvh=kvh, g=g,
+                           hd=hd, bs=bs, mb=mb, n_blocks=3 * mb + 4,
+                           pad_tokens=int(rng.integers(0, 4)))
+        _assert_chunk_matches(case, interpret=True)
+
+
+def test_paged_chunk_segmented_spans():
+    """Segmented-prompt masking (prelude + own segment) inside the kernel
+    must match the oracle's span semantics exactly."""
+    rng = np.random.default_rng(42)
+    case = _chunk_case(rng, B=3, kvh=2, g=2, hd=32, bs=8, mb=3,
+                       n_blocks=16, segmented=True)
+    _assert_chunk_matches(case, interpret=True)
+
+
+def test_paged_chunk_all_pad_row_is_finite():
+    """A fully-masked query row (packed pad, row_of=-1) must produce finite
+    output — the l=max(l,eps) guard — never NaN."""
+    rng = np.random.default_rng(5)
+    case = _chunk_case(rng, B=2, kvh=1, g=2, hd=16, bs=4, mb=2,
+                       n_blocks=8, pad_tokens=3)
+    _assert_chunk_matches(case, interpret=True)
+
+
+def test_paged_chunk_raw_minus_one_tables():
+    """Ragged plans hand the kernel tables where every unallocated entry is
+    -1 (no scratch-block reroute). Check some -1s are actually present."""
+    rng = np.random.default_rng(11)
+    case = _chunk_case(rng, B=4, kvh=2, g=1, hd=32, bs=4, mb=4, n_blocks=24)
+    assert (np.asarray(case[3]) == -1).any()
+    _assert_chunk_matches(case, interpret=True)
+
+
+# -------------------------------------------------------------- compiled mode
+@pytest.mark.skipif(not ON_TPU, reason="compiled Mosaic kernels need a TPU")
+@pytest.mark.parametrize("seed", range(2))
+def test_paged_decode_compiled(seed):
+    rng = np.random.default_rng(200 + seed)
+    case = _decode_case(rng, B=4, kvh=2, g=2, hd=64, bs=16, mb=4,
+                        n_blocks=32)
+    _assert_decode_matches(case, interpret=False)
+
+
+@pytest.mark.skipif(not ON_TPU, reason="compiled Mosaic kernels need a TPU")
+@pytest.mark.parametrize("seed", range(2))
+def test_paged_chunk_compiled(seed):
+    rng = np.random.default_rng(300 + seed)
+    case = _chunk_case(rng, B=4, kvh=2, g=2, hd=64, bs=16, mb=4,
+                       n_blocks=32, pad_tokens=2)
+    _assert_chunk_matches(case, interpret=False)
