@@ -55,6 +55,7 @@ def solve_allocation(
     resource_penalty: float = 0.0,
     tp_degree: Optional[Dict[str, int]] = None,
     tp_efficiency=None,
+    kv_capacity_scale: Optional[Dict[str, float]] = None,
 ) -> AllocationPlan:
     """Solve the Fig. 8 LP for the captured workflow graph.
 
@@ -86,6 +87,14 @@ def solve_allocation(
     dominant-resource bundles as ONE replica, so the plan reports sharded
     replica counts and tp degrees that buy latency at sub-linear throughput
     cost show up as extra provisioned chips.
+    ``kv_capacity_scale``: per-component KV-capacity multipliers
+    (``components.Generator.kv_capacity_scale`` — the ratio of the fitted
+    alpha's baseline KV bytes/token to the deployed pool's). An int8 paged
+    pool (``kv_dtype="int8"``) holds ~2x the concurrent context per HBM
+    byte, so at a KV-capacity-bound operating point each resource unit
+    sustains proportionally more load; folded into the alpha exactly like
+    ``alpha_scale``, so the LP provisions fewer Generator replicas at equal
+    offered load while staying linear.
     """
     t0 = time.perf_counter()
     tp_degree = tp_degree or {}
@@ -153,6 +162,9 @@ def solve_allocation(
         # tp-sharded replicas: per-chip capacity discounted by the collective
         # overhead of spanning t chips (keeps the constraint linear in r)
         scale *= tp_eff(comp, tp_degree.get(comp, 1))
+        # KV-capacity-bound components: a quantized pool holds more context
+        # per HBM byte, so each replica sustains proportionally more load
+        scale *= (kv_capacity_scale or {}).get(comp, 1.0)
         for j, rt in enumerate(res_types):
             alpha = meta.alpha.get(rt, 0.0) * scale
             row[rvar(ci, j)] = -alpha

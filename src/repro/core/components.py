@@ -137,7 +137,20 @@ class Generator(Component):
     # tp, so the speedup saturates: s(t) = t / (1 + tp_comm_fraction*(t-1)).
     # tp_comm_fraction is the collective share of a t=1 step (calibratable).
     tp_degree = 1
+    # collective share of a t=1 step. The 0.08 default is a documented prior;
+    # ``profiling.calibrate_generator_from_engine(tp_engine=...)`` refits it
+    # from an actual --tp 2 A/B wall-time ratio (fit_tp_comm_fraction).
     tp_comm_fraction = 0.08
+    # KV storage footprint per context token (bytes across the layer stack,
+    # K+V, including any scale-pool overhead). KV capacity is the binding
+    # resource of a decode replica (pool exhaustion drives preemption), so
+    # at a fixed HBM budget a replica's concurrent context — and with it the
+    # request rate one chip sustains — scales with baseline/current bytes
+    # per token: an int8 pool (``kv_dtype="int8"``) halves the bytes and
+    # ~doubles capacity. ``baseline_kv_bytes_per_token`` records what the
+    # fitted alpha assumed; both None disables the discount (scale 1.0).
+    kv_bytes_per_token: Optional[float] = None
+    baseline_kv_bytes_per_token: Optional[float] = None
 
     def __init__(self, engine=None, max_new: int = 64, tp_degree: int = 1):
         super().__init__()
@@ -157,6 +170,21 @@ class Generator(Component):
         if t <= 1:
             return 1.0
         return t / (1.0 + self.tp_comm_fraction * (t - 1))
+
+    def kv_capacity_scale(self) -> float:
+        """Capacity multiplier the pool storage format buys a replica:
+        ``baseline_kv_bytes_per_token / kv_bytes_per_token``. At equal HBM
+        budget an int8 pool fits ~2x the context of the float pool the alpha
+        was fitted against, so one resource unit sustains proportionally more
+        concurrent requests. Fed to ``solve_allocation(kv_capacity_scale=
+        ...)`` — a pure alpha multiplier, the LP stays linear. Returns 1.0
+        when either byte count is unset (no measured pool format)."""
+        if not self.kv_bytes_per_token or not self.baseline_kv_bytes_per_token:
+            return 1.0
+        return max(
+            float(self.baseline_kv_bytes_per_token) / float(self.kv_bytes_per_token),
+            1e-6,
+        )
 
     def generate(self, prompt_tokens, max_new: Optional[int] = None):
         """``prompt_tokens``: flat tokens, or a ``SegmentedPrompt`` from the

@@ -77,12 +77,31 @@ def profile_components(
             meta.alpha_host_hit_rate = 0.0
 
 
+def engine_kv_bytes_per_token(engine) -> Optional[float]:
+    """HBM bytes one cached context token occupies in ``engine``'s KV pools.
+
+    Read off the live pool arrays, so quantized storage is priced as
+    deployed: ``2 * layers * kv_heads * head_dim * itemsize`` for the K+V
+    payload, plus the amortized per-block scale-pool share
+    (``2 * layers * kv_heads * 4 / block_size``) when the pools are int8.
+    Returns None for dense-cache engines (no paged pools to measure)."""
+    kv = getattr(engine, "kv", None)
+    if kv is None or not hasattr(kv, "k"):
+        return None
+    G, _, block_size, kvh, hd = kv.k.shape
+    per_tok = 2.0 * G * kvh * hd * kv.k.dtype.itemsize
+    if getattr(kv, "quantized", False):
+        per_tok += 2.0 * G * kvh * 4.0 / block_size
+    return float(per_tok)
+
+
 def calibrate_generator_from_engine(
     gen,
     engine,
     prefill_len: int = 64,
     decode_tokens: int = 24,
     long_ctx: int = 96,
+    tp_engine=None,
 ) -> Dict[str, float]:
     """Refit a Generator's cost-model coefficients against a live engine
     (the paged serving engine at laptop scale).
@@ -91,20 +110,29 @@ def calibrate_generator_from_engine(
     decode s/token from a short-context decode run, the KV-read term from
     the long-vs-short context decode delta, the chunked-prefill TTFT slope
     from the long-prompt request's recorded first-token timestamp, and the
-    prefix hit rate from the engine's shared-block counters. Returns the
-    measured coefficients (also written onto ``gen``)."""
+    prefix hit rate from the engine's shared-block counters. KV bytes per
+    cached token are read off the live pools (``engine_kv_bytes_per_token``)
+    so the LP's capacity multiplier tracks quantized storage.
+
+    ``tp_engine``: an optional tensor-parallel engine for the SAME config;
+    when given, the tp=1 workload is replayed on it and the wall-time ratio
+    is inverted through ``fit_tp_comm_fraction`` into a measured
+    ``tp_comm_fraction`` — replacing the default guess with an A/B
+    measurement from this host. Returns the measured coefficients (also
+    written onto ``gen``)."""
 
     salt = [0]
     last_req = [None]
 
-    def timed(prompt_len: int, max_new: int) -> float:
+    def timed(prompt_len: int, max_new: int, eng=None) -> float:
         # distinct prompt per measurement: an accidental prefix-cache hit
         # would fake a near-zero prefill cost
+        eng = engine if eng is None else eng
         salt[0] += 1
         prompt = (np.arange(prompt_len) + salt[0] * 131) % 401
-        req = engine.submit(prompt, max_new=max_new)
+        req = eng.submit(prompt, max_new=max_new)
         t0 = time.perf_counter()
-        engine.run_until_done()
+        eng.run_until_done()
         dt = time.perf_counter() - t0
         assert req.done
         last_req[0] = req
@@ -151,6 +179,30 @@ def calibrate_generator_from_engine(
         "decode_cache_per_ctx_token_s": ctx_coeff,
         "prefix_hit_rate": hit_rate,
     }
+
+    kv_bytes = engine_kv_bytes_per_token(engine)
+    if kv_bytes is not None:
+        # baseline = what the same pools would cost stored at the model
+        # dtype; the ratio is the LP's KV-capacity multiplier
+        cfg = engine.cfg
+        import jax.numpy as jnp
+
+        fp_bytes = (2.0 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim
+                    * jnp.dtype(cfg.dtype).itemsize)
+        coeffs["kv_bytes_per_token"] = kv_bytes
+        coeffs["baseline_kv_bytes_per_token"] = float(fp_bytes)
+
+    if tp_engine is not None:
+        tp = (tp_engine.pool_layout.tp_degree
+              if getattr(tp_engine, "pool_layout", None) is not None else 1)
+        # same fresh-prompt workload on both engines; one warm-up run per
+        # engine keeps compile time out of the ratio
+        timed(prefill_len, 2, eng=tp_engine)
+        t_base = timed(prefill_len, decode_tokens)
+        t_tp = timed(prefill_len, decode_tokens, eng=tp_engine)
+        coeffs["tp_comm_fraction"] = fit_tp_comm_fraction(
+            tp, t_base / max(t_tp, 1e-9))
+
     gen.calibrate(coeffs)
     return coeffs
 

@@ -135,9 +135,13 @@ def decode_attention(
 # ---------------------------------------------------------------------------
 
 
-def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_ref, m_ref, l_ref, *, block_size: int, nkv: int,
-                         kvh: int, scale: float):
+def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         block_size: int, nkv: int, kvh: int, scale: float,
+                         quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(1)
     bb = b // kvh  # batch row (grid is B*KVH cells)
@@ -151,6 +155,11 @@ def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0].astype(jnp.float32)          # (G, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+    if quantized:
+        # int8 pool: the block DMA'd HBM->VMEM half-width; dequantize in
+        # VMEM with this (block, kv-head)'s scalar scale — the bandwidth win
+        k = k * ks_ref[0, 0]
+        v = v * vs_ref[0, 0]
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                  # (G, bs)
@@ -181,7 +190,7 @@ def _paged_decode_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_decode_attention(
     q, k_pool, v_pool, block_tables, lengths, *, scale=None,
-    interpret: bool = True,
+    k_scale=None, v_scale=None, interpret: bool = True,
 ):
     """Block-table-driven decode attention over a paged KV pool.
 
@@ -195,12 +204,18 @@ def paged_decode_attention(
     interior holes) are masked to -inf inside the kernel, independent of the
     length check. Lengths must be >= 1 per row (a fully-masked row would
     softmax over nothing).
+
+    ``k_scale``/``v_scale`` ((n_blocks, KVH) float32, both or neither) mark
+    an int8-quantized pool: each cell DMAs its block at half the HBM bytes
+    and dequantizes in VMEM with the block's per-KV-head scale — the scale
+    BlockSpec rides the same table-driven index_map as K/V.
     """
     B, H, hd = q.shape
     bs, KVH = k_pool.shape[1], k_pool.shape[2]
     G = H // KVH
     mb = block_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
 
     qf = q.reshape(B, KVH, G, hd).reshape(B * KVH, G, hd)
     tables = jnp.asarray(block_tables, jnp.int32)
@@ -212,17 +227,26 @@ def paged_decode_attention(
     def kv_map(b, j, tab_ref, len_ref):
         return (jnp.maximum(tab_ref[b // KVH, j], 0), 0, b % KVH, 0)
 
+    def sc_map(b, j, tab_ref, len_ref):
+        return (jnp.maximum(tab_ref[b // KVH, j], 0), b % KVH)
+
     kernel = functools.partial(
-        _paged_decode_kernel, block_size=bs, nkv=mb, kvh=KVH, scale=scale
+        _paged_decode_kernel, block_size=bs, nkv=mb, kvh=KVH, scale=scale,
+        quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec((1, G, hd), q_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+    ]
+    operands = [tables, lens, qf, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), sc_map), pl.BlockSpec((1, 1), sc_map)]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B * KVH, mb),
-        in_specs=[
-            pl.BlockSpec((1, G, hd), q_map),
-            pl.BlockSpec((1, bs, 1, hd), kv_map),
-            pl.BlockSpec((1, bs, 1, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, G, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((G, hd), jnp.float32),
@@ -235,23 +259,27 @@ def paged_decode_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * KVH, G, hd), q.dtype),
         interpret=interpret,
-    )(tables, lens, qf, k_pool, v_pool)
+    )(*operands)
     return out.reshape(B, KVH * G, hd)
 
 
-def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, scale=None):
+def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                               scale=None, k_scale=None, v_scale=None):
     """jnp gather oracle: materialize each sequence's contiguous view from its
     block table (jnp.take over the block axis) and run masked softmax
     attention. This is also the numerics contract for the engine's XLA decode
-    path."""
+    path. ``k_scale``/``v_scale`` dequantize an int8 pool after the gather."""
     B, H, hd = q.shape
     bs, KVH = k_pool.shape[1], k_pool.shape[2]
     mb = block_tables.shape[1]
     tables = jnp.asarray(block_tables, jnp.int32)
     safe = jnp.maximum(tables, 0)
 
-    def gather(pool):
+    def gather(pool, sc=None):
         g = jnp.take(pool, safe, axis=0)  # (B, mb, bs, KVH, hd)
+        if sc is not None:
+            s = jnp.take(sc, safe, axis=0)  # (B, mb, KVH)
+            g = g.astype(jnp.float32) * s[:, :, None, :, None]
         return g.reshape(B, mb * bs, KVH, hd)
 
     slots = jnp.arange(mb * bs)
@@ -260,7 +288,8 @@ def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, scale=N
     )
     from repro.models.attention import decode_attention as xla_decode
 
-    out = xla_decode(q[:, None], gather(k_pool), gather(v_pool), valid, scale=scale)
+    out = xla_decode(q[:, None], gather(k_pool, k_scale),
+                     gather(v_pool, v_scale), valid, scale=scale)
     return out[:, 0]
 
 
@@ -270,8 +299,12 @@ def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, scale=N
 
 
 def _paged_chunk_kernel(tab_ref, row_ref, slot_ref, pend_ref, sstart_ref,
-                        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-                        *, block_size: int, nkv: int, kvh: int, scale: float):
+                        q_ref, k_ref, v_ref, *rest, block_size: int, nkv: int,
+                        kvh: int, scale: float, quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     c = pl.program_id(0)   # packed token x kv-head cell
     j = pl.program_id(1)   # logical kv block
     t = c // kvh           # packed token index
@@ -285,6 +318,10 @@ def _paged_chunk_kernel(tab_ref, row_ref, slot_ref, pend_ref, sstart_ref,
     q = q_ref[0].astype(jnp.float32)          # (G, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+    if quantized:
+        # dequantize the int8 block in VMEM (per-block, per-KV-head scale)
+        k = k * ks_ref[0, 0]
+        v = v * vs_ref[0, 0]
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                  # (G, bs)
@@ -319,7 +356,7 @@ def _paged_chunk_kernel(tab_ref, row_ref, slot_ref, pend_ref, sstart_ref,
 
 def paged_chunk_attention(
     q, k_pool, v_pool, block_tables, row_of, slots, p_end, s_start, *,
-    scale=None, interpret: bool = True,
+    scale=None, k_scale=None, v_scale=None, interpret: bool = True,
 ):
     """Ragged fused-step attention: T packed query tokens over a paged pool.
 
@@ -337,13 +374,15 @@ def paged_chunk_attention(
     Grid (T*KVH, max_blocks): one query token per cell row keeps the q tile
     at (G, hd) — the decode kernel's shape — so the kernel is indifferent to
     how rows were packed; ``block_tables[row_of[t]]`` drives the K/V
-    index_map through scalar prefetch.
+    index_map through scalar prefetch. ``k_scale``/``v_scale`` ((n_blocks,
+    KVH) float32) mark an int8 pool, dequantized in VMEM after the block DMA.
     """
     T, H, hd = q.shape
     bs, KVH = k_pool.shape[1], k_pool.shape[2]
     G = H // KVH
     mb = block_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
 
     qf = q.reshape(T, KVH, G, hd).reshape(T * KVH, G, hd)
     tables = jnp.asarray(block_tables, jnp.int32)
@@ -355,17 +394,31 @@ def paged_chunk_attention(
         row = jnp.maximum(row_ref[c // KVH], 0)
         return (jnp.maximum(tab_ref[row, j], 0), 0, c % KVH, 0)
 
+    def sc_map(c, j, tab_ref, row_ref, slot_ref, pend_ref, sstart_ref):
+        row = jnp.maximum(row_ref[c // KVH], 0)
+        return (jnp.maximum(tab_ref[row, j], 0), c % KVH)
+
     kernel = functools.partial(
-        _paged_chunk_kernel, block_size=bs, nkv=mb, kvh=KVH, scale=scale
+        _paged_chunk_kernel, block_size=bs, nkv=mb, kvh=KVH, scale=scale,
+        quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec((1, G, hd), q_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+    ]
+    operands = [
+        tables, jnp.asarray(row_of, jnp.int32), jnp.asarray(slots, jnp.int32),
+        jnp.asarray(p_end, jnp.int32), jnp.asarray(s_start, jnp.int32),
+        qf, k_pool, v_pool,
+    ]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), sc_map), pl.BlockSpec((1, 1), sc_map)]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(T * KVH, mb),
-        in_specs=[
-            pl.BlockSpec((1, G, hd), q_map),
-            pl.BlockSpec((1, bs, 1, hd), kv_map),
-            pl.BlockSpec((1, bs, 1, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, G, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((G, hd), jnp.float32),
@@ -378,16 +431,13 @@ def paged_chunk_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T * KVH, G, hd), q.dtype),
         interpret=interpret,
-    )(
-        tables, jnp.asarray(row_of, jnp.int32), jnp.asarray(slots, jnp.int32),
-        jnp.asarray(p_end, jnp.int32), jnp.asarray(s_start, jnp.int32),
-        qf, k_pool, v_pool,
-    )
+    )(*operands)
     return out.reshape(T, KVH * G, hd)
 
 
 def ref_paged_chunk_attention(q, k_pool, v_pool, block_tables, row_of, slots,
-                              p_end, s_start, scale=None):
+                              p_end, s_start, scale=None, k_scale=None,
+                              v_scale=None):
     """jnp gather oracle for ``paged_chunk_attention``. Gathers each ROW's
     contiguous view once (B small slabs, not one per packed token — the
     naive per-token gather moves T/B times more pool bytes and dominates the
@@ -410,10 +460,14 @@ def ref_paged_chunk_attention(q, k_pool, v_pool, block_tables, row_of, slots,
     rows = jnp.maximum(row_of, 0)
     safe = jnp.maximum(tables, 0)
 
-    def gather(pool):
-        return jnp.take(pool, safe, axis=0).reshape(B, S, KVH, hd)
+    def gather(pool, sc=None):
+        g = jnp.take(pool, safe, axis=0)  # (B, mb, bs, KVH, hd)
+        if sc is not None:
+            s = jnp.take(sc, safe, axis=0)  # (B, mb, KVH)
+            g = g.astype(jnp.float32) * s[:, :, None, :, None]
+        return g.reshape(B, S, KVH, hd)
 
-    K, V = gather(k_pool), gather(v_pool)
+    K, V = gather(k_pool, k_scale), gather(v_pool, v_scale)
     qg = q.reshape(T, KVH, G, hd)
     scores = jnp.einsum(
         "tkgh,bskh->tbkgs", qg, K, preferred_element_type=jnp.float32

@@ -36,7 +36,7 @@ def serve_sim(app_name: str, rate: float, duration: float, engine: str = "patchw
 def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
                tp: int = 1, dp: int = 1, preempt: str = "recompute",
                host_blocks: int = 0, pipeline: bool = True,
-               kernel: str = "reference"):
+               kernel: str = "reference", kv_dtype: str = None):
     """Serve a real reduced model with batched requests on this host.
 
     ``tp > 1`` shards the paged engine over a ("model",) mesh — TP-resident
@@ -51,7 +51,12 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
 
     ``kernel="pallas"`` runs the serving hot path (ragged fused step +
     paged decode) on the Pallas kernels — single-device only, so it is
-    rejected when combined with ``tp``/``dp`` sharding."""
+    rejected when combined with ``tp``/``dp`` sharding.
+
+    ``kv_dtype="int8"`` stores the paged KV pools quantized (per-block
+    absmax scales, dequant inside the kernels) — ~2x the block capacity at
+    the same HBM budget and half the KV read bytes per decode step.
+    Single-device only (the scale pools don't shard)."""
     import jax
 
     from repro.configs import get_arch, smoke_variant
@@ -65,8 +70,10 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
         layout = ShardedPoolLayout(make_serving_mesh(tp, dp), dp_blocks=dp > 1)
     if kernel == "pallas" and (tp > 1 or dp > 1):
         raise SystemExit("--kernel pallas is single-device: drop --tp/--dp")
+    if kv_dtype and (tp > 1 or dp > 1):
+        raise SystemExit("--kv-dtype int8 is single-device: drop --tp/--dp")
     tier = {"preempt": preempt, "host_blocks": host_blocks or None,
-            "pipeline": pipeline, "kernel": kernel}
+            "pipeline": pipeline, "kernel": kernel, "kv_dtype": kv_dtype}
     if dp > 1:
         eng = DataParallelEngineGroup(cfg, dp=dp, max_batch=4, max_seq=256,
                                       pool_layout=layout, **tier)
@@ -87,7 +94,8 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     stats = eng.stats()
     mode = "pipelined" if pipeline else "sync"
     print(f"[serve:real] {arch}: tp={tp} dp={dp} preempt={preempt} "
-          f"mode={mode} kernel={kernel} {stats['tokens_out']} tokens out")
+          f"mode={mode} kernel={kernel} kv={stats.get('kv_dtype', kv_dtype or 'float')} "
+          f"{stats['tokens_out']} tokens out")
     if "padded_token_fraction" in stats:
         print(f"[serve:real] fused-step padding: "
               f"{100 * stats['padded_token_fraction']:.1f}% of slot tokens")
@@ -126,6 +134,11 @@ def main(argv=None):
                     help="hot-path attention implementation: the XLA gather "
                          "reference, or the Pallas paged kernels (interpret "
                          "mode off-TPU; single-device only)")
+    ap.add_argument("--kv-dtype", default=None, choices=["int8"],
+                    help="paged KV pool storage format: int8 stores blocks "
+                         "quantized with per-block absmax scales (2x block "
+                         "capacity per HBM byte, kernels dequantize in "
+                         "VMEM); default keeps the model dtype")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="disable double-buffered dispatch (sync oracle mode: "
                          "each step materializes before the next plan builds)")
@@ -137,7 +150,7 @@ def main(argv=None):
     if args.real:
         serve_real(args.arch, tp=args.tp, dp=args.dp, preempt=args.preempt,
                    host_blocks=args.host_blocks, pipeline=not args.no_pipeline,
-                   kernel=args.kernel)
+                   kernel=args.kernel, kv_dtype=args.kv_dtype)
     else:
         serve_sim(args.app, args.rate, args.duration, args.engine, args.slo)
 

@@ -244,46 +244,56 @@ def prefill_chunk(cfg, params, caches, tokens, pos, positions=None,
 
 def prefill_packed(cfg, params, k_pool, v_pool, tables, tokens, row_of, slots,
                    positions, p_end, s_start, *, block_size, null_block,
-                   impl="reference", interpret=True):
+                   impl="reference", interpret=True, k_scales=None,
+                   v_scales=None):
     """Ragged fused step: T packed tokens (decode rows + prefill chunks from
     different sequences, no chunk-width padding) run against the paged pool
     directly. tokens/row_of/slots/positions/p_end/s_start: (T,) — see
     ``transformer.apply_layer_paged`` for the layout contract; tables: (B,
-    mb) RAW block tables. Returns (logits (T, V), k_pool, v_pool).
+    mb) RAW block tables. Returns (logits (T, V), k_pool, v_pool, k_scales,
+    v_scales); scales are None unless the pool is int8-quantized.
 
     ``impl="pallas"`` reads attention through ``kernels.paged_chunk_attention``
     (scalar-prefetched block streaming); ``"reference"`` is the jnp gather
     oracle. Both write the packed K/V into the pool before attending, so
-    the pool comes back ready for the next plan. Requires
-    ``paged_cache_supported`` (full-attention GQA, rope, period 1)."""
+    the pool comes back ready for the next plan. Quantized pools pass
+    ``k_scales``/``v_scales`` (L, n_blocks, KVH) running absmax scales:
+    writes requantize through ``write_paged_packed_q`` and both attention
+    impls dequantize at read. Requires ``paged_cache_supported``
+    (full-attention GQA, rope, period 1)."""
     x = embed_tokens(params["embed"], tokens[None])          # (1, T, D)
-    x, k_pool, v_pool = tfm.run_stack_paged(
+    x, k_pool, v_pool, k_scales, v_scales = tfm.run_stack_paged(
         cfg, params["blocks"], x, k_pool, v_pool, tables, row_of, slots,
         positions, p_end, s_start, block_size=block_size,
         null_block=null_block, impl=impl, interpret=interpret,
+        k_scales=k_scales, v_scales=v_scales,
     )
     x = tfm.apply_norm(cfg, params["final_norm"], x)
     logits = unembed(params["embed"], params.get("lm_head"), x, cfg.tie_embeddings)
     if cfg.padded_vocab != cfg.vocab_size:  # mask pad-vocab logits (as forward)
         pad_bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
         logits = logits + pad_bias.astype(logits.dtype)
-    return logits[0], k_pool, v_pool
+    return logits[0], k_pool, v_pool, k_scales, v_scales
 
 
 def decode_step_paged(cfg, params, k_pool, v_pool, tables, tokens, pos, *,
-                      block_size, null_block, interpret=True):
+                      block_size, null_block, interpret=True, k_scales=None,
+                      v_scales=None):
     """Pallas-native paged decode: one new token per row attends its block
     chain in place (``kernels.paged_decode_attention``), no contiguous view
     gather. tokens: (B, 1); pos: (B,). Returns (logits (B, V), k_pool,
-    v_pool). Requires ``paged_cache_supported``."""
+    v_pool, k_scales, v_scales); scales are None unless the pool is
+    int8-quantized, in which case the kernel dequantizes per-block in VMEM.
+    Requires ``paged_cache_supported``."""
     x = embed_tokens(params["embed"], tokens)
-    x, k_pool, v_pool = tfm.run_stack_decode_paged(
+    x, k_pool, v_pool, k_scales, v_scales = tfm.run_stack_decode_paged(
         cfg, params["blocks"], x, k_pool, v_pool, tables, pos,
         block_size=block_size, null_block=null_block, interpret=interpret,
+        k_scales=k_scales, v_scales=v_scales,
     )
     x = tfm.apply_norm(cfg, params["final_norm"], x)
     logits = unembed(params["embed"], params.get("lm_head"), x, cfg.tie_embeddings)
-    return logits[:, 0], k_pool, v_pool
+    return logits[:, 0], k_pool, v_pool, k_scales, v_scales
 
 
 def paged_cache_supported(cfg: ModelConfig) -> bool:
@@ -301,7 +311,6 @@ def paged_cache_supported(cfg: ModelConfig) -> bool:
         and not cfg.is_encoder_decoder
         and not cfg.num_meta_tokens
         and not cfg.num_patch_tokens
-        and not cfg.kv_cache_quant  # int8 paged pools: ROADMAP follow-on
     )
 
 
@@ -364,6 +373,9 @@ def init_cache(cfg: ModelConfig, B: int, S: int):
                 "k": jnp.zeros((G, B, Sc, cfg.num_kv_heads, cfg.head_dim), kv_dt),
                 "v": jnp.zeros((G, B, Sc, cfg.num_kv_heads, cfg.head_dim), kv_dt),
             }
+            if cfg.kv_cache_quant:  # per-slot, per-KV-head absmax scales
+                e["k_scale"] = jnp.zeros((G, B, Sc, cfg.num_kv_heads), jnp.float32)
+                e["v_scale"] = jnp.zeros((G, B, Sc, cfg.num_kv_heads), jnp.float32)
         if at == MIXER_HYBRID:
             e["conv"] = jnp.zeros((G, B, cfg.ssm_conv - 1, cfg.d_model), dtype)
             e["h"] = jnp.zeros((G, B, cfg.d_model, cfg.ssm_state), jnp.float32)

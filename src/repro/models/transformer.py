@@ -151,7 +151,9 @@ def _attn_branch_seq(cfg, lp, xn, positions, attn_type, want_cache, S):
         Sc = cache_len_for(cfg, {"attn_type": attn_type}, S)
         cache = {"k": k[:, S - Sc :], "v": v[:, S - Sc :]}
         if cfg.kv_cache_quant:
-            cache = {kk: _quantize_kv(vv, cfg) for kk, vv in cache.items()}
+            qk, sk = _quantize_kv(cache["k"])
+            qv, sv = _quantize_kv(cache["v"])
+            cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
     return out, cache
 
 
@@ -219,15 +221,22 @@ def apply_layer_seq(cfg, kind, lp, x, positions, want_cache, enc_out=None):
 # ---------------------------------------------------------------------------
 
 
-def _quantize_kv(x, cfg):
-    """Symmetric static int8 quantization for the KV cache (beyond-paper H3:
-    halves the HBM cache-read traffic that dominates the decode roofline)."""
-    s = cfg.kv_quant_scale
-    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+def _quantize_kv(x):
+    """Symmetric int8 KV quantization with per-slot, per-KV-head absmax
+    scales (halves the HBM cache-read traffic that dominates the decode
+    roofline). Same convention as the paged pools' per-(block, KV-head)
+    scales — the dense cache's "block" is a single slot, so no running-max
+    bookkeeping is needed: each slot is written exactly once.
+
+    x: (B, C, KVH, hd) -> (int8 values, (B, C, KVH) float32 scales)."""
+    xf = x.astype(jnp.float32)
+    s = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.maximum(s, 1e-30)[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
 
 
-def _dequantize_kv(x, cfg, dtype):
-    return (x.astype(jnp.float32) * cfg.kv_quant_scale).astype(dtype)
+def _dequantize_kv(x, s, dtype):
+    return (x.astype(jnp.float32) * s[..., None]).astype(dtype)
 
 
 def _cache_update(c, new, pos):
@@ -287,10 +296,15 @@ def apply_layer_decode(cfg, kind, lp, x, cache, pos, enc_out_unused=None):
         eff_at = ATTN_SWA if at == MIXER_HYBRID else at
         Sc = cache["k"].shape[1]
         if cfg.kv_cache_quant:
-            kc = _cache_update(cache["k"], _quantize_kv(k, cfg), pos)
-            vc = _cache_update(cache["v"], _quantize_kv(v, cfg), pos)
-            k_read = _dequantize_kv(kc, cfg, q.dtype)
-            v_read = _dequantize_kv(vc, cfg, q.dtype)
+            qk, sk = _quantize_kv(k)
+            qv, sv = _quantize_kv(v)
+            kc = _cache_update(cache["k"], qk, pos)
+            vc = _cache_update(cache["v"], qv, pos)
+            ksc = _cache_update(cache["k_scale"], sk, pos)
+            vsc = _cache_update(cache["v_scale"], sv, pos)
+            k_read = _dequantize_kv(kc, ksc, q.dtype)
+            v_read = _dequantize_kv(vc, vsc, q.dtype)
+            new_cache.update(k_scale=ksc, v_scale=vsc)
         else:
             kc = _cache_update(cache["k"], k, pos)
             vc = _cache_update(cache["v"], v, pos)
@@ -377,11 +391,17 @@ def apply_layer_prefix(cfg, kind, lp, x, cache, pos, positions=None,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     Sc = cache["k"].shape[1]
+    new_cache = dict(cache)
     if cfg.kv_cache_quant:
-        kc = _cache_update(cache["k"], _quantize_kv(k, cfg), pos)
-        vc = _cache_update(cache["v"], _quantize_kv(v, cfg), pos)
-        k_read = _dequantize_kv(kc, cfg, q.dtype)
-        v_read = _dequantize_kv(vc, cfg, q.dtype)
+        qk, sk = _quantize_kv(k)
+        qv, sv = _quantize_kv(v)
+        kc = _cache_update(cache["k"], qk, pos)
+        vc = _cache_update(cache["v"], qv, pos)
+        ksc = _cache_update(cache["k_scale"], sk, pos)
+        vsc = _cache_update(cache["v_scale"], sv, pos)
+        k_read = _dequantize_kv(kc, ksc, q.dtype)
+        v_read = _dequantize_kv(vc, vsc, q.dtype)
+        new_cache.update(k_scale=ksc, v_scale=vsc)
     else:
         kc = _cache_update(cache["k"], k, pos)
         vc = _cache_update(cache["v"], v, pos)
@@ -395,7 +415,6 @@ def apply_layer_prefix(cfg, kind, lp, x, cache, pos, positions=None,
         )
     a_out = attn.chunk_decode_attention(q, k_read, v_read, valid)
     x = x + a_out.reshape(B, C, cfg.num_heads * cfg.head_dim) @ lp["attn"]["wo"]
-    new_cache = dict(cache)
     new_cache.update(k=kc, v=vc)
 
     xn = apply_norm(cfg, lp["norm2"], x)
@@ -526,7 +545,8 @@ def run_stack_prefix(cfg, blocks, x, caches, pos, positions=None,
 
 def apply_layer_paged(cfg, kind, lp, x, k_slice, v_slice, tables, row_of,
                       slots, positions, p_end, s_start, *, block_size,
-                      null_block, impl="reference", interpret=True):
+                      null_block, k_sc=None, v_sc=None, impl="reference",
+                      interpret=True):
     """Ragged fused-step layer: T packed tokens (decode rows and prefill
     chunks from different sequences, back to back in one flat buffer) read
     and write the paged pool DIRECTLY — no per-row contiguous view is ever
@@ -547,12 +567,19 @@ def apply_layer_paged(cfg, kind, lp, x, k_slice, v_slice, tables, row_of,
     gathers per-token views and runs the masked-softmax oracle (the numerics
     contract, and the path that keeps working under shard_map meshes).
 
+    ``k_sc``/``v_sc`` ((n_blocks, KVH) float32, both or neither) mark an
+    int8-quantized pool slice: writes quantize at scatter time
+    (``write_paged_packed_q``, running-max per-block scales) and attention
+    dequantizes inside the kernel (or after the oracle's gather).
+
     Full-attention GQA stacks only, like the rest of the paged path."""
     from repro.kernels.decode_attention import (
         paged_chunk_attention, ref_paged_chunk_attention,
     )
     from repro.models.layers import apply_rope
-    from repro.serving.paged_cache import write_paged_packed
+    from repro.serving.paged_cache import (
+        write_paged_packed, write_paged_packed_q,
+    )
 
     at = kind["attn_type"]
     if at != ATTN_FULL or kind["cross"]:
@@ -566,20 +593,29 @@ def apply_layer_paged(cfg, kind, lp, x, k_slice, v_slice, tables, row_of,
     if cfg.use_rope:
         q = apply_rope(q, positions[None], cfg.rope_theta)
         k = apply_rope(k, positions[None], cfg.rope_theta)
-    k_slice = write_paged_packed(
-        k_slice, tables, row_of, slots, k[0], block_size, null_block
-    )
-    v_slice = write_paged_packed(
-        v_slice, tables, row_of, slots, v[0], block_size, null_block
-    )
+    if k_sc is None:
+        k_slice = write_paged_packed(
+            k_slice, tables, row_of, slots, k[0], block_size, null_block
+        )
+        v_slice = write_paged_packed(
+            v_slice, tables, row_of, slots, v[0], block_size, null_block
+        )
+    else:
+        k_slice, k_sc = write_paged_packed_q(
+            k_slice, k_sc, tables, row_of, slots, k[0], block_size, null_block
+        )
+        v_slice, v_sc = write_paged_packed_q(
+            v_slice, v_sc, tables, row_of, slots, v[0], block_size, null_block
+        )
     if impl == "pallas":
         a_out = paged_chunk_attention(
             q[0], k_slice, v_slice, tables, row_of, slots, p_end, s_start,
-            interpret=interpret,
+            k_scale=k_sc, v_scale=v_sc, interpret=interpret,
         )
     else:
         a_out = ref_paged_chunk_attention(
-            q[0], k_slice, v_slice, tables, row_of, slots, p_end, s_start
+            q[0], k_slice, v_slice, tables, row_of, slots, p_end, s_start,
+            k_scale=k_sc, v_scale=v_sc,
         )
     T = x.shape[1]
     x = x + (a_out.reshape(1, T, cfg.num_heads * cfg.head_dim)
@@ -590,45 +626,55 @@ def apply_layer_paged(cfg, kind, lp, x, k_slice, v_slice, tables, row_of,
         ffn_out, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
     else:
         ffn_out = apply_mlp(lp["mlp"], xn, cfg.act)
-    return x + ffn_out, k_slice, v_slice
+    return x + ffn_out, k_slice, v_slice, k_sc, v_sc
 
 
 def run_stack_paged(cfg, blocks, x, k_pool, v_pool, tables, row_of, slots,
                     positions, p_end, s_start, *, block_size, null_block,
-                    impl="reference", interpret=True):
+                    k_scales=None, v_scales=None, impl="reference",
+                    interpret=True):
     """Scan the layer stack in ragged fused-step mode: x (1, T, D) packed
     tokens against the full paged pool (G, n_blocks, bs, KVH, hd). Each scan
     step consumes and re-emits one layer group's pool slice — the pool is
     both the KV source and the write destination, so no separate
-    gather/extract/scatter phases exist. Returns (x, k_pool, v_pool)."""
+    gather/extract/scatter phases exist. ``k_scales``/``v_scales``
+    ((G, n_blocks, KVH) float32) ride the scan alongside an int8 pool; both
+    are None for float pools. Returns (x, k_pool, v_pool, k_scales,
+    v_scales)."""
     p = period(cfg)
     kinds = [layer_kind(cfg, i) for i in range(p)]
     assert p == 1, "ragged paged path requires period-1 stacks"
 
     def body(x, slices):
-        block_slice, k_slice, v_slice = slices
-        x, k_slice, v_slice = apply_layer_paged(
+        block_slice, k_slice, v_slice, k_sc, v_sc = slices
+        x, k_slice, v_slice, k_sc, v_sc = apply_layer_paged(
             cfg, kinds[0], block_slice[0], x, k_slice, v_slice, tables,
             row_of, slots, positions, p_end, s_start,
             block_size=block_size, null_block=null_block,
-            impl=impl, interpret=interpret,
+            k_sc=k_sc, v_sc=v_sc, impl=impl, interpret=interpret,
         )
-        return x, (k_slice, v_slice)
+        return x, (k_slice, v_slice, k_sc, v_sc)
 
-    x, (k_pool, v_pool) = jax.lax.scan(body, x, (blocks, k_pool, v_pool))
-    return x, k_pool, v_pool
+    x, (k_pool, v_pool, k_scales, v_scales) = jax.lax.scan(
+        body, x, (blocks, k_pool, v_pool, k_scales, v_scales)
+    )
+    return x, k_pool, v_pool, k_scales, v_scales
 
 
 def apply_layer_decode_paged(cfg, kind, lp, x, k_slice, v_slice, tables, pos,
-                             *, block_size, null_block, interpret=True):
+                             *, block_size, null_block, k_sc=None, v_sc=None,
+                             interpret=True):
     """Pallas-native paged decode layer: write the new token's K/V into the
     pool slice, then stream the sequence's blocks through
     ``kernels.paged_decode_attention`` — no contiguous view gather. x:
     (B, 1, D); k/v_slice: (n_blocks, bs, KVH, hd); tables: (B, mb); pos:
     (B,) absolute position of the new token (rows must be table-backed at
-    ``pos`` — the plan allocates before it decodes)."""
+    ``pos`` — the plan allocates before it decodes). ``k_sc``/``v_sc``
+    ((n_blocks, KVH) float32) mark an int8 pool slice: the token's K/V
+    quantizes at scatter time and the kernel dequantizes in VMEM."""
     from repro.kernels.decode_attention import paged_decode_attention
     from repro.models.layers import apply_rope
+    from repro.serving.paged_cache import _quantized_scatter
 
     at = kind["attn_type"]
     if at != ATTN_FULL or kind["cross"]:
@@ -653,10 +699,19 @@ def apply_layer_decode_paged(cfg, kind, lp, x, k_slice, v_slice, tables, pos,
         flat = pool.reshape(nb * bs, *pool.shape[2:])
         return flat.at[dest].set(new.astype(flat.dtype)).reshape(pool.shape)
 
-    k_slice = scatter(k_slice, k[:, 0])
-    v_slice = scatter(v_slice, v[:, 0])
+    def scatter_q(pool, sc, new):
+        p, s = _quantized_scatter(pool[None], sc[None], dest, new[None])
+        return p[0], s[0]
+
+    if k_sc is None:
+        k_slice = scatter(k_slice, k[:, 0])
+        v_slice = scatter(v_slice, v[:, 0])
+    else:
+        k_slice, k_sc = scatter_q(k_slice, k_sc, k[:, 0])
+        v_slice, v_sc = scatter_q(v_slice, v_sc, v[:, 0])
     a_out = paged_decode_attention(
-        q[:, 0], k_slice, v_slice, tables, pos + 1, interpret=interpret
+        q[:, 0], k_slice, v_slice, tables, pos + 1,
+        k_scale=k_sc, v_scale=v_sc, interpret=interpret
     )
     x = x + (a_out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
              @ lp["attn"]["wo"])
@@ -666,28 +721,33 @@ def apply_layer_decode_paged(cfg, kind, lp, x, k_slice, v_slice, tables, pos,
         ffn_out, _ = moe_mod.apply_moe(lp["moe"], xn, cfg)
     else:
         ffn_out = apply_mlp(lp["mlp"], xn, cfg.act)
-    return x + ffn_out, k_slice, v_slice
+    return x + ffn_out, k_slice, v_slice, k_sc, v_sc
 
 
 def run_stack_decode_paged(cfg, blocks, x, k_pool, v_pool, tables, pos, *,
-                           block_size, null_block, interpret=True):
+                           block_size, null_block, k_scales=None,
+                           v_scales=None, interpret=True):
     """Scan the layer stack in pallas paged-decode mode: x (B, 1, D), pool
-    (G, n_blocks, bs, KVH, hd), per-row positions (B,). Returns
-    (x, k_pool, v_pool)."""
+    (G, n_blocks, bs, KVH, hd), per-row positions (B,). ``k_scales``/
+    ``v_scales`` ride the scan for int8 pools (None otherwise). Returns
+    (x, k_pool, v_pool, k_scales, v_scales)."""
     p = period(cfg)
     kinds = [layer_kind(cfg, i) for i in range(p)]
     assert p == 1, "paged pallas decode requires period-1 stacks"
 
     def body(x, slices):
-        block_slice, k_slice, v_slice = slices
-        x, k_slice, v_slice = apply_layer_decode_paged(
+        block_slice, k_slice, v_slice, k_sc, v_sc = slices
+        x, k_slice, v_slice, k_sc, v_sc = apply_layer_decode_paged(
             cfg, kinds[0], block_slice[0], x, k_slice, v_slice, tables, pos,
-            block_size=block_size, null_block=null_block, interpret=interpret,
+            block_size=block_size, null_block=null_block,
+            k_sc=k_sc, v_sc=v_sc, interpret=interpret,
         )
-        return x, (k_slice, v_slice)
+        return x, (k_slice, v_slice, k_sc, v_sc)
 
-    x, (k_pool, v_pool) = jax.lax.scan(body, x, (blocks, k_pool, v_pool))
-    return x, k_pool, v_pool
+    x, (k_pool, v_pool, k_scales, v_scales) = jax.lax.scan(
+        body, x, (blocks, k_pool, v_pool, k_scales, v_scales)
+    )
+    return x, k_pool, v_pool, k_scales, v_scales
 
 
 def run_stack_decode(cfg, blocks, x, caches, pos_scalar):

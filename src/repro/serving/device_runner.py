@@ -125,30 +125,36 @@ class DeviceRunner:
                 jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots),
                 jnp.asarray(plan.decode_idx),
             )
-            logits, eng.kv.k, eng.kv.v = eng._ragged_step_jit(
-                eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
+            logits, *pools = eng._ragged_step_jit(
+                eng.params, eng.kv.k, eng.kv.v, eng.kv.k_scale,
+                eng.kv.v_scale, jnp.asarray(plan.tables),
                 toks_in, jnp.asarray(plan.row_of), jnp.asarray(plan.slots),
                 jnp.asarray(plan.positions), jnp.asarray(plan.p_end),
                 jnp.asarray(plan.s_start), jnp.asarray(plan.last_idx),
             )
+            eng._set_pools(*pools)
         elif plan.kind == "fused":
             toks_in = self._subst_jit(
                 jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots)
             )
-            logits, eng.kv.k, eng.kv.v = eng._fused_step_jit(
-                eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
+            logits, *pools = eng._fused_step_jit(
+                eng.params, eng.kv.k, eng.kv.v, eng.kv.k_scale,
+                eng.kv.v_scale, jnp.asarray(plan.tables),
                 toks_in, jnp.asarray(plan.starts), jnp.asarray(plan.n_valid),
                 jnp.asarray(plan.positions), jnp.asarray(plan.p_end),
                 jnp.asarray(plan.s_start),
             )
+            eng._set_pools(*pools)
         else:
             toks_in = self._subst_jit(
                 jnp.asarray(plan.tokens), prev, jnp.asarray(plan.prev_slots)
             )
-            logits, eng.kv.k, eng.kv.v = eng._decode_dispatch_jit(
-                eng.params, eng.kv.k, eng.kv.v, jnp.asarray(plan.tables),
+            logits, *pools = eng._decode_dispatch_jit(
+                eng.params, eng.kv.k, eng.kv.v, eng.kv.k_scale,
+                eng.kv.v_scale, jnp.asarray(plan.tables),
                 toks_in, jnp.asarray(plan.starts),
             )
+            eng._set_pools(*pools)
         toks = self._sample_jit(sk, logits, jnp.asarray(plan.temps))
         ex = PlanExec(plan, toks, now)
         self._last = ex

@@ -106,9 +106,13 @@ from repro.serving.host_tier import HostBlockStore
 from repro.serving.paged_cache import (
     PagedKVCache,
     PoolArrays,
+    _quantized_scatter,
     gather_paged_batch,
+    gather_paged_batch_dq,
     write_paged_chunk,
     write_paged_chunk_batch,
+    write_paged_chunk_batch_q,
+    write_paged_chunk_q,
 )
 from repro.serving.sampler import sample_tokens
 from repro.serving.segments import SegmentedPrompt, build_layout
@@ -251,6 +255,7 @@ class GenerationEngine:
         kernel: str = "reference",
         ragged: bool = True,
         pack_align: int = 4,
+        kv_dtype: Optional[str] = None,
     ):
         """``mesh`` / ``pool_layout`` shard the paged backend over a device
         mesh: params become TP-resident (Megatron layout, embed/lm_head
@@ -294,7 +299,16 @@ class GenerationEngine:
         ``flusher`` shares one PriorityFlusher across engines (DP groups);
         ``host_bw_bytes_s`` calibrates the cost model's swap estimate;
         ``copy_budget`` bounds per-step async copy draining; ``telemetry``
-        (core.telemetry.Telemetry) receives per-step engine gauges."""
+        (core.telemetry.Telemetry) receives per-step engine gauges.
+
+        ``kv_dtype="int8"`` stores the paged pools quantized (per-block,
+        per-KV-head absmax scales ride alongside in parallel scale pools;
+        see serving.paged_cache) — half the KV bytes in HBM *and* on the
+        host tier, and half the HBM read traffic on the decode hot path
+        (the kernels dequantize in VMEM after the block DMA). Defaults to
+        ``"int8"`` when ``cfg.kv_cache_quant`` is set, so quant configs that
+        historically fell back to the dense engine now serve paged.
+        Single-device only for now (the scale pools don't shard)."""
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
@@ -367,6 +381,14 @@ class GenerationEngine:
         self._build_emitted: Optional[Dict[int, List[int]]] = None
 
         if self.backend == "paged":
+            if kv_dtype is None and cfg.kv_cache_quant:
+                kv_dtype = "int8"  # quant configs store int8 pools now
+            if kv_dtype is not None and (mesh is not None or pool_layout is not None
+                                         or (kv is not None and kv.layout is not None)):
+                raise ValueError(
+                    "kv_dtype='int8' is single-device only: the parallel "
+                    "scale pools do not shard over a mesh yet"
+                )
             self.block_size = block_size
             self.max_blocks = -(-max_seq // block_size)
             self.prefill_chunk_size = prefill_chunk_size
@@ -391,19 +413,28 @@ class GenerationEngine:
                 self.params = pool_layout.place_params(cfg, self.params)
             if kv is not None:
                 self.kv = kv
+                kv_dtype = kv.kv_dtype  # injected pool decides the format
                 if self.host_store is None:
                     self.host_store = kv.host_store  # DP group's shared tier
             else:
                 if self.host_store is None and (host_blocks
                                                 or preempt in ("swap", "cost")):
                     self.host_store = HostBlockStore.for_config(
-                        cfg, host_blocks or n_blocks, block_size
+                        cfg, host_blocks or n_blocks, block_size,
+                        kv_dtype=kv_dtype,
                     )
                 self.kv = PagedKVCache(
                     cfg, n_blocks, block_size, self.max_blocks,
                     prefix_sharing=prefix_sharing, layout=pool_layout,
-                    host_store=self.host_store,
+                    host_store=self.host_store, kv_dtype=kv_dtype,
                 )
+            self.kv_dtype = kv_dtype
+            # paged-path model calls never use the dense per-slot quant
+            # branch: when the pool is quantized the gathered views are
+            # already dequantized floats (and the _q writes requantize), so
+            # the oracle programs run the stack with kv_cache_quant off
+            self._oracle_cfg = (cfg.replace(kv_cache_quant=False)
+                                if cfg.kv_cache_quant else cfg)
             # reserved scratch block: swallows masked padding/inactive-slot
             # writes and backs clamped gathers of unallocated table entries
             self._null_block = self.kv.pool.allocate(_NULL_SEQ, 1)[0]
@@ -418,7 +449,9 @@ class GenerationEngine:
                 # carried pools each call, silently re-sharding per step
                 rep = pool_layout.replicated()
                 pool_s = pool_layout.pool_sharding(cfg, self.kv.pool.n_blocks)
-                out_s = (rep, pool_s, pool_s)
+                # scale outputs are None on meshes (int8 pools don't shard):
+                # empty pytree leaves under the tuple, no sharding to pin
+                out_s = (rep, pool_s, pool_s, None, None)
                 self._decode_paged_jit = jax.jit(self._decode_paged_fn, out_shardings=out_s)
                 self._prefill_chunk_jit = jax.jit(self._prefill_chunk_fn, out_shardings=out_s)
                 self._fused_step_jit = jax.jit(self._fused_step_fn, out_shardings=out_s)
@@ -436,6 +469,7 @@ class GenerationEngine:
                 self._decode_dispatch_jit = self._decode_paged_jit
         else:
             self.pool_layout = None
+            self.kv_dtype = None
             self.cache = init_cache(cfg, max_batch, max_seq)
             self._decode_jit = jax.jit(self._decode_fn)
             self._prefill_jit: Dict[int, Any] = {}
@@ -504,6 +538,7 @@ class GenerationEngine:
             s["measured_host_hit_rate"] = self.measured_host_hit_rate()
             s["tp_degree"] = self.pool_layout.tp_degree if self.pool_layout else 1
             s["preempt"] = self.preempt
+            s["kv_dtype"] = self.kv_dtype or str(jnp.dtype(self.cfg.dtype))
             s["kernel"] = self.kernel
             s["ragged"] = self.ragged
             s["fused_slot_tokens"] = self.fused_slot_tokens
@@ -553,8 +588,8 @@ class GenerationEngine:
             z = jnp.zeros((T,), jnp.int32)
             pad = jnp.full((T,), -1, jnp.int32)
             out = self._ragged_step_jit(
-                self.params, self.kv.k, self.kv.v, tables, z, pad, z, z, z,
-                z, li,
+                self.params, self.kv.k, self.kv.v, self.kv.k_scale,
+                self.kv.v_scale, tables, z, pad, z, z, z, z, li,
             )
             # the runner's packed prev-token substitution is per-length too
             self.runner._subst_packed_jit(z, prev, no_slot, li)
@@ -588,20 +623,22 @@ class GenerationEngine:
                 flat = jnp.zeros((T,), jnp.int32)
                 tables = jnp.full((B, self._view_blocks), -1, jnp.int32)
                 lowered = self._ragged_step_jit.lower(
-                    self.params, k, v, tables, flat, flat, flat, flat, flat,
+                    self.params, k, v, self.kv.k_scale, self.kv.v_scale,
+                    tables, flat, flat, flat, flat, flat,
                     flat, jnp.zeros((B,), jnp.int32)
                 )
             else:
                 tables = jnp.full((B, self._view_blocks), self._null_block,
                                   jnp.int32)
                 lowered = self._fused_step_jit.lower(
-                    self.params, k, v, tables, tokens, starts, n_valid,
-                    seg, seg, seg
+                    self.params, k, v, self.kv.k_scale, self.kv.v_scale,
+                    tables, tokens, starts, n_valid, seg, seg, seg
                 )
         elif which == "decode":
             tables = jnp.full((B, self.max_blocks), self._null_block, jnp.int32)
             lowered = self._decode_paged_jit.lower(
-                self.params, k, v, tables, tokens[:, :1], starts
+                self.params, k, v, self.kv.k_scale, self.kv.v_scale,
+                tables, tokens[:, :1], starts
             )
         elif which == "pool":
             bs = self.block_size
@@ -815,10 +852,21 @@ class GenerationEngine:
         ids = jnp.asarray(np.asarray(blocks, np.int32))
         k_gather = jnp.take(self.kv.k, ids, axis=1)
         v_gather = jnp.take(self.kv.v, ids, axis=1)
+        # quantized pools park int8 payloads (half the swap bytes) plus
+        # their per-block scales — the restore must see both
+        ks_gather = vs_gather = None
+        if self.kv.quantized:
+            ks_gather = jnp.take(self.kv.k_scale, ids, axis=1)
+            vs_gather = jnp.take(self.kv.v_scale, ids, axis=1)
         store = self.host_store
 
-        def _fill(k_gather=k_gather, v_gather=v_gather):
-            store.fill_seq(tag, np.asarray(k_gather), np.asarray(v_gather))
+        def _fill(k_gather=k_gather, v_gather=v_gather,
+                  ks_gather=ks_gather, vs_gather=vs_gather):
+            store.fill_seq(
+                tag, np.asarray(k_gather), np.asarray(v_gather),
+                k_scales=None if ks_gather is None else np.asarray(ks_gather),
+                v_scales=None if vs_gather is None else np.asarray(vs_gather),
+            )
 
         self._copy.submit(_fill, tag=tag)
         victim.swap_len = self.kv.lengths.get(victim.req_id, victim.pos)
@@ -863,7 +911,11 @@ class GenerationEngine:
                      if self.kv.pool.refcounts.get(b, 0) == 0)
         if n_fresh + n_warm > self.kv.pool.n_free:
             return False  # backpressure: blocks not yet available
-        k_np, v_np = self.host_store.restore_seq(tag)
+        if self.kv.quantized:
+            k_np, v_np, ks_np, vs_np = self.host_store.restore_seq(tag)
+        else:
+            k_np, v_np = self.host_store.restore_seq(tag)
+            ks_np = vs_np = None
         fresh_ords: List[int] = []
         fresh_ids: List[int] = []
         for i in range(n):
@@ -877,6 +929,13 @@ class GenerationEngine:
             ids = jnp.asarray(np.asarray(fresh_ids, np.int32))
             self.kv.k = self.kv.k.at[:, ids].set(jnp.asarray(k_np[:, fresh_ords]))
             self.kv.v = self.kv.v.at[:, ids].set(jnp.asarray(v_np[:, fresh_ords]))
+            if ks_np is not None:
+                # restored blocks bring their saved scales back verbatim (no
+                # reset: the int8 payloads are only meaningful under them)
+                self.kv.k_scale = self.kv.k_scale.at[:, ids].set(
+                    jnp.asarray(ks_np[:, fresh_ords]))
+                self.kv.v_scale = self.kv.v_scale.at[:, ids].set(
+                    jnp.asarray(vs_np[:, fresh_ords]))
         self.kv.lengths[req.req_id] = req.swap_len
         self.swap_reshared_blocks += len(shared)
         req.swap_keys = []
@@ -895,6 +954,10 @@ class GenerationEngine:
             return False
         shape = self.kv.k.shape  # (G, n_blocks, bs, KVH, hd)
         blk_bytes = 2 * shape[0] * int(np.prod(shape[2:])) * self.kv.k.dtype.itemsize
+        if self.kv.quantized:
+            # int8 payloads already halve blk_bytes via itemsize; the f32
+            # per-(block, KV-head) scales ride along (k + v planes)
+            blk_bytes += 2 * shape[0] * shape[3] * 4
         swap_s = 2.0 * len(chain) * blk_bytes / max(self.host_bw_bytes_s, 1.0)
         tok_s = self.runner.token_time_ema
         if tok_s is None:
@@ -910,32 +973,60 @@ class GenerationEngine:
         return decode_step(self.cfg, params, cache, tokens, pos)
 
     # ---------------------------------------------------------- paged path
-    def _prefill_chunk_fn(self, params, k_pool, v_pool, table_row, tokens, start,
-                          n_valid, positions, p_end, s_start):
+    def _set_pools(self, k_pool, v_pool, k_sc, v_sc) -> None:
+        """Land a step program's pool outputs back in the cache box (scales
+        only exist for int8 pools — None otherwise, nothing to store)."""
+        self.kv.k = k_pool
+        self.kv.v = v_pool
+        if k_sc is not None:
+            self.kv.k_scale = k_sc
+            self.kv.v_scale = v_sc
+
+    def _prefill_chunk_fn(self, params, k_pool, v_pool, k_sc, v_sc, table_row,
+                          tokens, start, n_valid, positions, p_end, s_start):
         """One chunked-prefill step for a single request (B=1): gather the
         sequence view, run the chunk through the stack, scatter its K/V back
         into the pool (padding rerouted to the scratch block).
         ``positions``/``p_end``/``s_start`` (1, C) carry the segmented-prompt
-        rope positions and attention spans (see serving.segments)."""
-        kview = gather_paged_batch(k_pool, table_row[None])  # (G,1,Sv,KVH,hd)
-        vview = gather_paged_batch(v_pool, table_row[None])
+        rope positions and attention spans (see serving.segments).
+        ``k_sc``/``v_sc`` are the (G, n_blocks, KVH) scale pools of an int8
+        pool (None for float pools): the view gather dequantizes and the
+        write-back requantizes under the running per-block absmax. All paged
+        step programs return (logits, k_pool, v_pool, k_sc, v_sc)."""
+        kview = gather_paged_batch_dq(k_pool, k_sc, table_row[None],
+                                      out_dtype=jnp.dtype(self.cfg.dtype))
+        vview = gather_paged_batch_dq(v_pool, v_sc, table_row[None],
+                                      out_dtype=jnp.dtype(self.cfg.dtype))
         caches = ({"k": kview, "v": vview},)
         logits, new_caches = prefill_chunk(
-            self.cfg, params, caches, tokens, start, positions, p_end, s_start
+            self._oracle_cfg, params, caches, tokens, start, positions, p_end,
+            s_start
         )
         pc = tokens.shape[1]
         newk = jax.lax.dynamic_slice_in_dim(new_caches[0]["k"], start, pc, axis=2)[:, 0]
         newv = jax.lax.dynamic_slice_in_dim(new_caches[0]["v"], start, pc, axis=2)[:, 0]
-        k_pool = write_paged_chunk(
-            k_pool, table_row, start, newk, self.block_size, n_valid, self._null_block
-        )
-        v_pool = write_paged_chunk(
-            v_pool, table_row, start, newv, self.block_size, n_valid, self._null_block
-        )
-        return logits[0, n_valid - 1], k_pool, v_pool
+        if k_sc is None:
+            k_pool = write_paged_chunk(
+                k_pool, table_row, start, newk, self.block_size, n_valid,
+                self._null_block
+            )
+            v_pool = write_paged_chunk(
+                v_pool, table_row, start, newv, self.block_size, n_valid,
+                self._null_block
+            )
+        else:
+            k_pool, k_sc = write_paged_chunk_q(
+                k_pool, k_sc, table_row, start, newk, self.block_size,
+                n_valid, self._null_block
+            )
+            v_pool, v_sc = write_paged_chunk_q(
+                v_pool, v_sc, table_row, start, newv, self.block_size,
+                n_valid, self._null_block
+            )
+        return logits[0, n_valid - 1], k_pool, v_pool, k_sc, v_sc
 
-    def _fused_step_fn(self, params, k_pool, v_pool, tables, tokens, starts,
-                       n_valid, positions, p_end, s_start):
+    def _fused_step_fn(self, params, k_pool, v_pool, k_sc, v_sc, tables,
+                       tokens, starts, n_valid, positions, p_end, s_start):
         """One fused interleaved step: every row is a chunk at its own cursor —
         decode rows carry one valid token at slot ``starts[b]``, prefill
         rows carry ``n_valid[b]`` prompt tokens. Gather each row's sequence
@@ -944,27 +1035,43 @@ class GenerationEngine:
         row's last-valid-token logits. ``positions``/``p_end``/``s_start``
         (B, C) carry per-row segmented-prompt rope positions and attention
         spans (flat rows: positions == slots, spans zero)."""
-        kview = gather_paged_batch(k_pool, tables)  # (G,B,Sv,KVH,hd)
-        vview = gather_paged_batch(v_pool, tables)
+        kview = gather_paged_batch_dq(k_pool, k_sc, tables,
+                                      out_dtype=jnp.dtype(self.cfg.dtype))  # (G,B,Sv,KVH,hd)
+        vview = gather_paged_batch_dq(v_pool, v_sc, tables,
+                                      out_dtype=jnp.dtype(self.cfg.dtype))
         caches = ({"k": kview, "v": vview},)
         logits, new_caches = prefill_chunk(
-            self.cfg, params, caches, tokens, starts, positions, p_end, s_start
+            self._oracle_cfg, params, caches, tokens, starts, positions,
+            p_end, s_start
         )
         B, C = tokens.shape
         b = jnp.arange(B)
         idx = starts[:, None] + jnp.arange(C)                 # (B, C) view slots
         newk = new_caches[0]["k"][:, b[:, None], idx]          # (G,B,C,KVH,hd)
         newv = new_caches[0]["v"][:, b[:, None], idx]
-        k_pool = write_paged_chunk_batch(
-            k_pool, tables, starts, newk, self.block_size, n_valid, self._null_block
-        )
-        v_pool = write_paged_chunk_batch(
-            v_pool, tables, starts, newv, self.block_size, n_valid, self._null_block
-        )
-        return logits[b, jnp.maximum(n_valid - 1, 0)], k_pool, v_pool
+        if k_sc is None:
+            k_pool = write_paged_chunk_batch(
+                k_pool, tables, starts, newk, self.block_size, n_valid,
+                self._null_block
+            )
+            v_pool = write_paged_chunk_batch(
+                v_pool, tables, starts, newv, self.block_size, n_valid,
+                self._null_block
+            )
+        else:
+            k_pool, k_sc = write_paged_chunk_batch_q(
+                k_pool, k_sc, tables, starts, newk, self.block_size, n_valid,
+                self._null_block
+            )
+            v_pool, v_sc = write_paged_chunk_batch_q(
+                v_pool, v_sc, tables, starts, newv, self.block_size, n_valid,
+                self._null_block
+            )
+        return logits[b, jnp.maximum(n_valid - 1, 0)], k_pool, v_pool, k_sc, v_sc
 
-    def _ragged_step_fn(self, params, k_pool, v_pool, tables, tokens, row_of,
-                        slots, positions, p_end, s_start, last_idx):
+    def _ragged_step_fn(self, params, k_pool, v_pool, k_sc, v_sc, tables,
+                        tokens, row_of, slots, positions, p_end, s_start,
+                        last_idx):
         """One ragged fused step: T packed tokens (flat buffer, no
         chunk-width padding) read and write the pool directly through RAW
         block tables — ``models.prefill_packed`` scatters each token's K/V
@@ -973,45 +1080,56 @@ class GenerationEngine:
         rerouted to the scratch block. Returns each row's last-valid-token
         logits, gathered by ``last_idx`` so the sampler keeps its (B,)
         contract."""
-        logits, k_pool, v_pool = prefill_packed(
+        logits, k_pool, v_pool, k_sc, v_sc = prefill_packed(
             self.cfg, params, k_pool, v_pool, tables, tokens, row_of, slots,
             positions, p_end, s_start, block_size=self.block_size,
             null_block=self._null_block, impl=self.kernel,
-            interpret=self._interpret,
+            interpret=self._interpret, k_scales=k_sc, v_scales=v_sc,
         )
-        return logits[last_idx], k_pool, v_pool
+        return logits[last_idx], k_pool, v_pool, k_sc, v_sc
 
-    def _decode_pallas_fn(self, params, k_pool, v_pool, tables, tokens, pos):
+    def _decode_pallas_fn(self, params, k_pool, v_pool, k_sc, v_sc, tables,
+                          tokens, pos):
         """Pallas-native batched decode: scatter the new token's K/V, then
         stream each row's block chain through ``paged_decode_attention`` —
         no contiguous view is ever materialized (the gather oracle
-        ``_decode_paged_fn`` remains the numerics contract)."""
+        ``_decode_paged_fn`` remains the numerics contract). Int8 pools DMA
+        half the KV bytes per block; the kernel dequantizes in VMEM."""
         return decode_step_paged(
             self.cfg, params, k_pool, v_pool, tables, tokens, pos,
             block_size=self.block_size, null_block=self._null_block,
-            interpret=self._interpret,
+            interpret=self._interpret, k_scales=k_sc, v_scales=v_sc,
         )
 
-    def _decode_paged_fn(self, params, k_pool, v_pool, tables, tokens, pos):
+    def _decode_paged_fn(self, params, k_pool, v_pool, k_sc, v_sc, tables,
+                         tokens, pos):
         """Batched block-table decode: gather each slot's contiguous view
         (the jnp gather oracle of kernels.decode_attention), run the shared
         decode step, scatter the new K/V entries back into the pool."""
+        dt = jnp.dtype(self.cfg.dtype)
         caches = (
-            {"k": gather_paged_batch(k_pool, tables), "v": gather_paged_batch(v_pool, tables)},
+            {"k": gather_paged_batch_dq(k_pool, k_sc, tables, out_dtype=dt),
+             "v": gather_paged_batch_dq(v_pool, v_sc, tables, out_dtype=dt)},
         )
-        logits, new_caches = decode_step(self.cfg, params, caches, tokens, pos)
+        logits, new_caches = decode_step(self._oracle_cfg, params, caches,
+                                         tokens, pos)
         b = jnp.arange(tables.shape[0])
         newk = new_caches[0]["k"][:, b, pos]  # (G,B,KVH,hd)
         newv = new_caches[0]["v"][:, b, pos]
         bs = self.block_size
         dest = jnp.maximum(tables[b, pos // bs], 0) * bs + pos % bs
 
+        if k_sc is not None:
+            k_pool, k_sc = _quantized_scatter(k_pool, k_sc, dest, newk)
+            v_pool, v_sc = _quantized_scatter(v_pool, v_sc, dest, newv)
+            return logits, k_pool, v_pool, k_sc, v_sc
+
         def scatter(pool, new):
             G, nb = pool.shape[0], pool.shape[1]
             flat = pool.reshape(G, nb * bs, *pool.shape[3:])
             return flat.at[:, dest].set(new.astype(flat.dtype)).reshape(pool.shape)
 
-        return logits, scatter(k_pool, newk), scatter(v_pool, newv)
+        return logits, scatter(k_pool, newk), scatter(v_pool, newv), None, None
 
     def _seg_arrays(self, req: Request, pos: int, c: int, width: int) -> tuple:
         """(positions, p_end, s_start) (1, width) slices of the request's
@@ -1045,11 +1163,13 @@ class GenerationEngine:
             chunk = np.zeros((1, pc), np.int32)
             chunk[0, :C] = toks[pos : pos + C]
             positions, p_end, s_start = self._seg_arrays(req, pos, C, pc)
-            last, self.kv.k, self.kv.v = self._prefill_chunk_jit(
-                self.params, self.kv.k, self.kv.v, table, jnp.asarray(chunk),
+            last, *pools = self._prefill_chunk_jit(
+                self.params, self.kv.k, self.kv.v, self.kv.k_scale,
+                self.kv.v_scale, table, jnp.asarray(chunk),
                 pos, C, jnp.asarray(positions), jnp.asarray(p_end),
                 jnp.asarray(s_start),
             )
+            self._set_pools(*pools)
             req.prefill_pos = pos + C
             self.prefill_tokens += C
             _advance_cursor(req)
@@ -1120,7 +1240,11 @@ class GenerationEngine:
                 continue
             while True:
                 try:
-                    self.kv.pool.extend_for(r.req_id, r.pos + 1)
+                    nb = self.kv.pool.extend_for(r.req_id, r.pos + 1)
+                    if nb is not None:
+                        # a fresh block's scale slot must not inherit the
+                        # previous tenant's absmax (running-max quantization)
+                        self.kv.reset_block_scales([nb])
                     break
                 except MemoryError:
                     active = [x for x in self.slots if x is not None]
@@ -1327,10 +1451,12 @@ class GenerationEngine:
             for i, r in enumerate(active):
                 valid = rows[i] >= 0
                 tables[r.slot, valid] = rows[i][valid]
-            logits, self.kv.k, self.kv.v = self._decode_dispatch_jit(
-                self.params, self.kv.k, self.kv.v,
+            logits, *pools = self._decode_dispatch_jit(
+                self.params, self.kv.k, self.kv.v, self.kv.k_scale,
+                self.kv.v_scale,
                 jnp.asarray(tables), jnp.asarray(tokens), jnp.asarray(pos),
             )
+            self._set_pools(*pools)
             for r in active:
                 self.kv.lengths[r.req_id] = r.pos + 1
         else:
@@ -1431,17 +1557,22 @@ class DataParallelEngineGroup:
                  block_size: int = 16, n_blocks_per_replica: Optional[int] = None,
                  prefix_sharing: bool = True, pool_layout: Optional[ShardedPoolLayout] = None,
                  seed: int = 0, host_store: Optional[HostBlockStore] = None,
-                 host_blocks: Optional[int] = None, **engine_kwargs):
+                 host_blocks: Optional[int] = None,
+                 kv_dtype: Optional[str] = None, **engine_kwargs):
         if dp < 1:
             raise ValueError("dp must be >= 1")
         max_blocks = -(-max_seq // block_size)
         per = n_blocks_per_replica or (max_batch * (max_blocks + 1) + 1)
         total = per * dp
         self.pool_layout = pool_layout
+        if kv_dtype is None and cfg.kv_cache_quant:
+            kv_dtype = "int8"
+        if kv_dtype is not None and pool_layout is not None:
+            raise ValueError("kv_dtype='int8' does not shard over a mesh yet")
         if host_store is None and (host_blocks
                                    or engine_kwargs.get("preempt") in ("swap", "cost")):
             host_store = HostBlockStore.for_config(
-                cfg, host_blocks or total, block_size
+                cfg, host_blocks or total, block_size, kv_dtype=kv_dtype
             )
         self.host_store = host_store
         # one shared transport: chunks from every replica's streams flush in
@@ -1456,7 +1587,7 @@ class DataParallelEngineGroup:
             kv = PagedKVCache(
                 cfg, total, block_size, max_blocks, prefix_sharing=prefix_sharing,
                 layout=pool_layout, block_range=(lo, hi), arrays=arrays,
-                host_store=host_store, client_tag=rank,
+                host_store=host_store, client_tag=rank, kv_dtype=kv_dtype,
                 # write-through: siblings should host-hit a doc without
                 # waiting for the producing replica to evict it from HBM
                 host_write_through=host_store is not None,

@@ -66,6 +66,15 @@ class HostBlockStore:
         self.block_size = bs
         self.k = np.zeros((G, n_blocks, bs, KVH, hd), dtype)
         self.v = np.zeros_like(self.k)
+        # int8 pools carry per-(block, KV-head) scales through the host tier:
+        # a promoted or swapped-in block must dequantize exactly as it did on
+        # device, so the scale rides next to the payload in parallel slabs
+        self.quantized = np.dtype(dtype) == np.int8
+        if self.quantized:
+            self.k_scale = np.zeros((G, n_blocks, KVH), np.float32)
+            self.v_scale = np.zeros_like(self.k_scale)
+        else:
+            self.k_scale = self.v_scale = None
         self.free: List[int] = list(range(n_blocks))
         self._by_key: Dict[bytes, int] = {}     # prefix key -> slot
         self._key_of: Dict[int, bytes] = {}     # reverse map
@@ -81,14 +90,19 @@ class HostBlockStore:
         self.swap_ins = 0
 
     @classmethod
-    def for_config(cls, cfg, n_blocks: int, block_size: int) -> "HostBlockStore":
-        """Mirror the device pool geometry of ``PagedKVCache`` for ``cfg``."""
+    def for_config(cls, cfg, n_blocks: int, block_size: int,
+                   kv_dtype: Optional[str] = None) -> "HostBlockStore":
+        """Mirror the device pool geometry of ``PagedKVCache`` for ``cfg``.
+        ``kv_dtype="int8"`` mirrors a quantized pool (int8 payload + scale
+        slabs) — at equal byte budget the host tier then holds ~2x the
+        blocks of a float16 store."""
         import jax.numpy as jnp
 
         from repro.models import transformer as tfm
 
         G = cfg.num_layers // tfm.period(cfg)
-        dtype = jnp.dtype(cfg.dtype)  # ml_dtypes-backed numpy dtype (bf16 ok)
+        # ml_dtypes-backed numpy dtype (bf16 ok)
+        dtype = np.int8 if kv_dtype == "int8" else jnp.dtype(cfg.dtype)
         return cls((G, block_size, cfg.num_kv_heads, cfg.head_dim), dtype,
                    n_blocks=n_blocks)
 
@@ -137,21 +151,28 @@ class HostBlockStore:
         return key in self._by_key
 
     def put(self, key: bytes, k_block: np.ndarray, v_block: np.ndarray,
-            owner: Any = None) -> bool:
+            owner: Any = None, k_scale: Optional[np.ndarray] = None,
+            v_scale: Optional[np.ndarray] = None) -> bool:
         """Demote one block's contents under ``key`` (device eviction path).
 
         A key already resident is only re-heated (contents are immutable by
         the keying contract — equal key means bit-identical KV). Returns False
         when neither a free nor an evictable slot exists (the store is all
-        pinned swap sets)."""
+        pinned swap sets). Quantized stores require the block's ``k_scale``/
+        ``v_scale`` ((G, KVH) each) alongside the int8 payload."""
         if key in self._by_key:
             self._touch(key)
             return True
+        if self.quantized and (k_scale is None or v_scale is None):
+            raise ValueError("quantized HostBlockStore.put needs k/v scales")
         slot = self._take_slot()
         if slot is None:
             return False
         self.k[:, slot] = k_block
         self.v[:, slot] = v_block
+        if self.quantized:
+            self.k_scale[:, slot] = k_scale
+            self.v_scale[:, slot] = v_scale
         self._by_key[key] = slot
         self._key_of[slot] = key
         self._lru[key] = None
@@ -163,7 +184,9 @@ class HostBlockStore:
         """Batched promotion read: ``(k, v)`` stacked ``(G, len(keys), bs,
         KVH, hd)`` copies, in key order. Records hits (and cross-replica hits
         when the producer tag differs from ``owner``) and re-heats every key.
-        Every key must be resident (callers gate on ``contains``)."""
+        Every key must be resident (callers gate on ``contains``). Quantized
+        stores return ``(k, v, k_scale, v_scale)`` with ``(G, len(keys),
+        KVH)`` scale stacks."""
         slots = [self._by_key[k] for k in keys]
         for key in keys:
             self._touch(key)
@@ -171,7 +194,11 @@ class HostBlockStore:
             producer = self._producer.get(key)
             if owner is not None and producer is not None and producer != owner:
                 self.cross_hits += 1
-        return self.k[:, slots].copy(), self.v[:, slots].copy()
+        k, v = self.k[:, slots].copy(), self.v[:, slots].copy()
+        if self.quantized:
+            return (k, v, self.k_scale[:, slots].copy(),
+                    self.v_scale[:, slots].copy())
+        return k, v
 
     # ------------------------------------------------------------- swap API
     def reserve_seq(self, tag: Any, n: int) -> Optional[List[int]]:
@@ -193,16 +220,25 @@ class HostBlockStore:
         self.swap_outs += 1
         return slots
 
-    def fill_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray) -> None:
+    def fill_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray,
+                 k_scales: Optional[np.ndarray] = None,
+                 v_scales: Optional[np.ndarray] = None) -> None:
         """Fill a reserved swap set's contents (async copy-engine path).
         Tolerant of a tag that was dropped before the copy drained."""
         slots = self._swap.get(tag)
         if slots is None:
             return
+        if self.quantized and (k_scales is None or v_scales is None):
+            raise ValueError("quantized HostBlockStore.fill_seq needs scales")
         self.k[:, slots] = k_blocks
         self.v[:, slots] = v_blocks
+        if self.quantized:
+            self.k_scale[:, slots] = k_scales
+            self.v_scale[:, slots] = v_scales
 
-    def save_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray) -> bool:
+    def save_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray,
+                 k_scales: Optional[np.ndarray] = None,
+                 v_scales: Optional[np.ndarray] = None) -> bool:
         """Pin a preempted sequence's block chain (``(G, n, bs, KVH, hd)``)
         under ``tag``. All-or-nothing: returns False (store unchanged apart
         from any keyed evictions attempted for room) when the chain cannot be
@@ -211,19 +247,24 @@ class HostBlockStore:
         slots = self.reserve_seq(tag, int(k_blocks.shape[1]))
         if slots is None:
             return False
-        self.fill_seq(tag, k_blocks, v_blocks)
+        self.fill_seq(tag, k_blocks, v_blocks, k_scales, v_scales)
         return True
 
     def saved_blocks(self, tag: Any) -> int:
         return len(self._swap.get(tag, ()))
 
     def restore_seq(self, tag: Any):
-        """Unpin and return a swap set's ``(k, v)`` block chain copies."""
+        """Unpin and return a swap set's ``(k, v)`` block chain copies
+        (``(k, v, k_scale, v_scale)`` for a quantized store)."""
         slots = self._swap.pop(tag)
         k, v = self.k[:, slots].copy(), self.v[:, slots].copy()
+        out = (k, v)
+        if self.quantized:
+            out = (k, v, self.k_scale[:, slots].copy(),
+                   self.v_scale[:, slots].copy())
         self.free.extend(slots)
         self.swap_ins += 1
-        return k, v
+        return out
 
     def drop_seq(self, tag: Any) -> None:
         """Abandon a swap set without restoring (victim fell back to

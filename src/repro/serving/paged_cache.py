@@ -274,6 +274,128 @@ def write_paged_packed(pool_kv, block_tables, row_of, slots, new_kv,
     return flat.at[dest].set(new_kv.astype(flat.dtype)).reshape(pool_kv.shape)
 
 
+# ---------------------------------------------------------------------------
+# int8 quantized pool scatters (per-block, per-KV-head running-max scales)
+# ---------------------------------------------------------------------------
+
+
+def _quantized_scatter(pool_kv, scales, dest, new_vals):
+    """Core of every quantized write: scatter float K/V entries into an int8
+    pool, maintaining per-(block, KV-head) absmax scales.
+
+    pool_kv: (G, nb, bs, KVH, hd) int8; scales: (G, nb, KVH) float32;
+    dest: (N,) flat slot indices (block * bs + offset, pads already routed to
+    the scratch block); new_vals: (N,) float entries (G, N, KVH, hd).
+
+    Scales are a running max (``new_scale = max(old, absmax(new)/127)``) so a
+    block's already-written slots never clip. When a write grows a block's
+    scale, the block's existing int8 payload is re-quantized in place
+    (``round(q * old/new)``) — only the *affected* blocks are gathered and
+    rewritten, never the whole pool. Duplicate block ids in ``dest`` rescale
+    to identical values, so the duplicate scatter writes are benign."""
+    G, nb, bs = pool_kv.shape[0], pool_kv.shape[1], pool_kv.shape[2]
+    blk = dest // bs                                           # (N,)
+    absmax = jnp.max(jnp.abs(new_vals.astype(jnp.float32)), axis=-1)  # (G,N,KVH)
+    blk_max = jnp.zeros_like(scales).at[:, blk].max(absmax)
+    new_scales = jnp.maximum(scales, blk_max / 127.0)
+    # rescale affected blocks whose scale grew (ratio < 1 elsewhere is 1)
+    ratio = jnp.where(new_scales > 0.0,
+                      scales / jnp.maximum(new_scales, 1e-30), 1.0)
+    old_blocks = pool_kv[:, blk].astype(jnp.float32)           # (G,N,bs,KVH,hd)
+    r = ratio[:, blk]                                          # (G,N,KVH)
+    rescaled = jnp.clip(jnp.round(old_blocks * r[:, :, None, :, None]),
+                        -127, 127)
+    pool_kv = pool_kv.at[:, blk].set(rescaled.astype(pool_kv.dtype))
+    # quantize the incoming entries with their destination block's new scale
+    s_dest = jnp.maximum(new_scales[:, blk], 1e-30)            # (G,N,KVH)
+    q = jnp.clip(jnp.round(new_vals.astype(jnp.float32) / s_dest[:, :, :, None]),
+                 -127, 127)
+    flat = pool_kv.reshape(G, nb * bs, *pool_kv.shape[3:])
+    flat = flat.at[:, dest].set(q.astype(pool_kv.dtype))
+    return flat.reshape(pool_kv.shape), new_scales
+
+
+def write_paged_chunk_q(pool_kv, scales, block_table_row, start, new_kv,
+                        block_size: int, n_valid=None, null_dest: int = 0):
+    """Quantized ``write_paged_chunk``: same destination routing, int8 store
+    with running-max scales. Returns ``(pool, scales)``."""
+    bs = pool_kv.shape[2]
+    C = new_kv.shape[1]
+    pos = start + jnp.arange(C)
+    blk = jnp.maximum(block_table_row[pos // bs], 0)
+    dest = blk * bs + pos % bs
+    if n_valid is not None:
+        dest = jnp.where(jnp.arange(C) < n_valid, dest, null_dest * bs)
+    return _quantized_scatter(pool_kv, scales, dest, new_kv)
+
+
+def write_paged_chunk_batch_q(pool_kv, scales, block_tables, starts, new_kv,
+                              block_size: int, n_valid=None,
+                              null_dest: int = 0):
+    """Quantized ``write_paged_chunk_batch``: multi-row chunk scatter into an
+    int8 pool. Returns ``(pool, scales)``."""
+    G, bs = pool_kv.shape[0], pool_kv.shape[2]
+    B, C = new_kv.shape[1], new_kv.shape[2]
+    pos = starts[:, None] + jnp.arange(C)                      # (B, C)
+    blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)
+    dest = jnp.maximum(blk, 0) * bs + pos % bs
+    if n_valid is not None:
+        dest = jnp.where(jnp.arange(C)[None, :] < n_valid[:, None], dest,
+                         null_dest * bs)
+    return _quantized_scatter(
+        pool_kv, scales, dest.reshape(-1),
+        new_kv.reshape(G, B * C, *new_kv.shape[3:]),
+    )
+
+
+def write_paged_packed_q(pool_kv, scales, block_tables, row_of, slots, new_kv,
+                         block_size: int, null_dest: int = 0):
+    """Quantized ``write_paged_packed``: one layer group's pool slice (no G
+    axis), scales slice (nb, KVH). Returns ``(pool, scales)``."""
+    bs = pool_kv.shape[1]
+    tables = jnp.asarray(block_tables, jnp.int32)
+    blk = tables[jnp.maximum(row_of, 0), slots // bs]          # (T,)
+    dest = jnp.where(
+        (row_of >= 0) & (blk >= 0), blk * bs + slots % bs, null_dest * bs
+    )
+    p, s = _quantized_scatter(pool_kv[None], scales[None], dest, new_kv[None])
+    return p[0], s[0]
+
+
+def dequantize_blocks(blocks, block_scales, out_dtype=jnp.float32):
+    """Dequantize gathered int8 blocks (..., bs, KVH, hd) with matching
+    per-block scales (..., KVH): broadcast-multiply over slot and head dims."""
+    return blocks.astype(out_dtype) * block_scales[..., None, :, None].astype(out_dtype)
+
+
+def gather_paged_dq(pool_kv, scales, block_table_row, max_blocks: int,
+                    out_dtype=jnp.float32):
+    """``gather_paged`` for quantized pools: materialize a dequantized
+    contiguous view. With ``scales=None`` falls back to the plain gather."""
+    if scales is None:
+        return gather_paged(pool_kv, block_table_row, max_blocks)
+    safe = jnp.maximum(block_table_row[:max_blocks], 0)
+    g = jnp.take(pool_kv, safe, axis=1)        # (G, mb, bs, KVH, hd)
+    s = jnp.take(scales, safe, axis=1)         # (G, mb, KVH)
+    g = dequantize_blocks(g, s, out_dtype)
+    G, nb, bs, KVH, hd = g.shape
+    return g.reshape(G, nb * bs, KVH, hd)
+
+
+def gather_paged_batch_dq(pool_kv, scales, block_tables,
+                          out_dtype=jnp.float32):
+    """``gather_paged_batch`` for quantized pools: batched dequantized view.
+    With ``scales=None`` falls back to the plain gather."""
+    if scales is None:
+        return gather_paged_batch(pool_kv, block_tables)
+    safe = jnp.maximum(block_tables, 0)
+    g = jnp.take(pool_kv, safe, axis=1)        # (G, B, mb, bs, KVH, hd)
+    s = jnp.take(scales, safe, axis=1)         # (G, B, mb, KVH)
+    g = dequantize_blocks(g, s, out_dtype)
+    G, B, mb, bs = g.shape[:4]
+    return g.reshape(G, B, mb * bs, *g.shape[4:])
+
+
 def gather_paged(pool_kv, block_table_row, max_blocks: int):
     """Materialize a sequence's contiguous cache view from its pages:
     (G, max_blocks*block_size, KVH, hd). Unallocated pages read block 0 and
@@ -360,13 +482,19 @@ class PoolArrays:
     PagedKVCache holds the same PoolArrays box, and the engines' functional
     array updates (``cache.k = new_k``) publish through it, so a replica
     always steps against the latest array containing every replica's blocks.
-    Disjoint block ranges make the interleaved updates conflict-free."""
+    Disjoint block ranges make the interleaved updates conflict-free.
 
-    __slots__ = ("k", "v")
+    Quantized pools (``kv_dtype="int8"``) carry per-(block, KV-head) float32
+    scale pools in ``k_scale``/``v_scale`` (shape (G, n_blocks, KVH)); both
+    are ``None`` for float pools."""
 
-    def __init__(self, k, v):
+    __slots__ = ("k", "v", "k_scale", "v_scale")
+
+    def __init__(self, k, v, k_scale=None, v_scale=None):
         self.k = k
         self.v = v
+        self.k_scale = k_scale
+        self.v_scale = v_scale
 
 
 class PagedKVCache:
@@ -399,7 +527,8 @@ class PagedKVCache:
                  max_blocks_per_seq: int = 64, prefix_sharing: bool = True,
                  layout=None, block_range: Optional[Tuple[int, int]] = None,
                  arrays: Optional[PoolArrays] = None, host_store=None,
-                 host_write_through: bool = False, client_tag=None):
+                 host_write_through: bool = False, client_tag=None,
+                 kv_dtype: Optional[str] = None):
         """``host_store`` (serving.host_tier.HostBlockStore) attaches the
         host-memory tier: warm blocks evicted from HBM demote their contents
         there, and ``admit_tokens`` promotes host-resident keys back as a
@@ -407,7 +536,13 @@ class PagedKVCache:
         every newly published prefix block to host at ``register_prefix``
         time — the DP-group setting, so replicas share doc blocks without
         waiting for an eviction. ``client_tag`` identifies this cache to the
-        (possibly shared) store for cross-replica hit accounting."""
+        (possibly shared) store for cross-replica hit accounting.
+
+        ``kv_dtype="int8"`` stores the pools quantized with per-(block,
+        KV-head) float32 scale pools alongside (``k_scale``/``v_scale``);
+        ``None`` (default) stores ``cfg.dtype`` floats. Prefix keys stay
+        token-content hashes either way, so sharing and the segment index are
+        dtype-oblivious."""
         from repro.models import transformer as tfm
 
         self.cfg = cfg
@@ -416,7 +551,10 @@ class PagedKVCache:
         self.layout = layout
         p = tfm.period(cfg)
         G = cfg.num_layers // p
-        dtype = jnp.dtype(cfg.dtype)
+        if kv_dtype is not None and kv_dtype not in ("int8",):
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        self.kv_dtype = kv_dtype
+        dtype = jnp.int8 if kv_dtype == "int8" else jnp.dtype(cfg.dtype)
         lo, hi = block_range if block_range is not None else (0, n_blocks)
         if not (0 <= lo < hi <= n_blocks):
             raise ValueError(f"block_range {(lo, hi)} outside [0, {n_blocks})")
@@ -433,8 +571,14 @@ class PagedKVCache:
             if layout is not None:
                 layout.validate(cfg)
                 k = jax.device_put(k, layout.pool_sharding(cfg, n_blocks))
-            arrays = PoolArrays(k, jnp.zeros_like(k))
+            if kv_dtype == "int8":
+                ks = jnp.zeros((G, n_blocks, cfg.num_kv_heads), jnp.float32)
+                arrays = PoolArrays(k, jnp.zeros_like(k), ks, jnp.zeros_like(ks))
+            else:
+                arrays = PoolArrays(k, jnp.zeros_like(k))
         self._arrays = arrays
+        if self.kv_dtype is None and arrays.k_scale is not None:
+            self.kv_dtype = "int8"  # shared box from a quantized sibling
         self.lengths: Dict[int, int] = {}
         self.prefix_sharing = prefix_sharing
         self.host_store = host_store
@@ -469,6 +613,39 @@ class PagedKVCache:
     def v(self, value):
         self._arrays.v = value
 
+    # scale pools proxy the same shared box (None for float pools)
+    @property
+    def k_scale(self):
+        return self._arrays.k_scale
+
+    @k_scale.setter
+    def k_scale(self, value):
+        self._arrays.k_scale = value
+
+    @property
+    def v_scale(self):
+        return self._arrays.v_scale
+
+    @v_scale.setter
+    def v_scale(self, value):
+        self._arrays.v_scale = value
+
+    @property
+    def quantized(self) -> bool:
+        return self._arrays.k_scale is not None
+
+    def reset_block_scales(self, ids) -> None:
+        """Zero the scale-pool entries of freshly allocated blocks. Scales
+        are a running max that only grows while a block is written; a reused
+        block must not inherit the previous tenant's (possibly much larger)
+        absmax, or the new tenant's entries quantize with needless error.
+        No-op for float pools."""
+        if not self.quantized or not len(ids):
+            return
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        self.k_scale = self.k_scale.at[:, idx].set(0.0)
+        self.v_scale = self.v_scale.at[:, idx].set(0.0)
+
     # ----------------------------------------------------------- host side
     def _forget_block(self, block_id: int):
         key = self._block_key.pop(block_id, None)
@@ -489,20 +666,34 @@ class PagedKVCache:
                     # block cannot corrupt them); only the blocking host
                     # materialization waits for a copy-engine drain slot
                     k_blk, v_blk = self.k[:, block_id], self.v[:, block_id]
+                    ks_blk = vs_blk = None
+                    if self.quantized:
+                        ks_blk = self.k_scale[:, block_id]
+                        vs_blk = self.v_scale[:, block_id]
                     store, owner = self.host_store, self.client_tag
 
-                    def _demote(key=key, k_blk=k_blk, v_blk=v_blk):
+                    def _demote(key=key, k_blk=k_blk, v_blk=v_blk,
+                                ks_blk=ks_blk, vs_blk=vs_blk):
                         if store.contains(key):
                             store.touch(key)  # raced with a write-through/put
                         else:
-                            store.put(key, np.asarray(k_blk),
-                                      np.asarray(v_blk), owner=owner)
+                            store.put(
+                                key, np.asarray(k_blk), np.asarray(v_blk),
+                                owner=owner,
+                                k_scale=None if ks_blk is None else np.asarray(ks_blk),
+                                v_scale=None if vs_blk is None else np.asarray(vs_blk),
+                            )
 
                     self.copy_engine.submit(_demote, tag=key)
                 else:
+                    ks = vs = None
+                    if self.quantized:
+                        ks = np.asarray(self.k_scale[:, block_id])
+                        vs = np.asarray(self.v_scale[:, block_id])
                     self.host_store.put(
                         key, np.asarray(self.k[:, block_id]),
                         np.asarray(self.v[:, block_id]), owner=self.client_tag,
+                        k_scale=ks, v_scale=vs,
                     )
 
     def _block_hits(self, tokens, layout) -> Dict[int, int]:
@@ -551,8 +742,14 @@ class PagedKVCache:
         (one batched host->device scatter) and publish their keys in the HBM
         index, so the next request with the same document HBM-hits."""
         keys = [key for _, key in promote]
-        k_np, v_np = self.host_store.read(keys, owner=self.client_tag)
         ids = jnp.asarray(np.asarray([b for b, _ in promote], np.int32))
+        if self.quantized:
+            k_np, v_np, ks_np, vs_np = self.host_store.read(
+                keys, owner=self.client_tag)
+            self.k_scale = self.k_scale.at[:, ids].set(jnp.asarray(ks_np))
+            self.v_scale = self.v_scale.at[:, ids].set(jnp.asarray(vs_np))
+        else:
+            k_np, v_np = self.host_store.read(keys, owner=self.client_tag)
         self.k = self.k.at[:, ids].set(jnp.asarray(k_np))
         self.v = self.v.at[:, ids].set(jnp.asarray(v_np))
         for b, key in promote:
@@ -617,14 +814,17 @@ class PagedKVCache:
         if n_new + n_warm > self.pool.n_free:
             return None
         promote: List[Tuple[int, int, bytes]] = []  # (ordinal, block, key)
+        fresh: List[int] = []
         for ordinal in range(n_blocks):
             if ordinal in hits:
                 self.pool.share(seq_id, hits[ordinal])
             else:
                 b = self.pool.allocate(seq_id, 1)[0]
+                fresh.append(b)
                 if ordinal in host_hits:
                     promote.append((ordinal, b, host_hits[ordinal]))
-        self.pool.allocate(seq_id, 1)  # decode slack block
+        fresh.extend(self.pool.allocate(seq_id, 1))  # decode slack block
+        self.reset_block_scales(fresh)
         # allocation above may have demoted evicted HBM blocks into the host
         # store, whose own LRU can (despite the re-heat in _host_block_hits)
         # drop a pending-promote key under extreme pressure — such ordinals
@@ -700,9 +900,16 @@ class PagedKVCache:
                 ids = jnp.asarray(np.asarray([b for b, _ in published], np.int32))
                 k_np = np.asarray(jnp.take(self.k, ids, axis=1))
                 v_np = np.asarray(jnp.take(self.v, ids, axis=1))
+                ks_np = vs_np = None
+                if self.quantized:
+                    ks_np = np.asarray(jnp.take(self.k_scale, ids, axis=1))
+                    vs_np = np.asarray(jnp.take(self.v_scale, ids, axis=1))
                 for j, (_b, key) in enumerate(published):
-                    self.host_store.put(key, k_np[:, j], v_np[:, j],
-                                        owner=self.client_tag)
+                    self.host_store.put(
+                        key, k_np[:, j], v_np[:, j], owner=self.client_tag,
+                        k_scale=None if ks_np is None else ks_np[:, j],
+                        v_scale=None if vs_np is None else vs_np[:, j],
+                    )
 
     def flush_write_through(self) -> None:
         """Drain queued write-through publishes (copy-engine mode only).
@@ -724,12 +931,20 @@ class PagedKVCache:
         ids = jnp.asarray(np.asarray([b for b, _ in pend], np.int32))
         kg = jnp.take(self.k, ids, axis=1)
         vg = jnp.take(self.v, ids, axis=1)
+        ksg = vsg = None
+        if self.quantized:
+            ksg = jnp.take(self.k_scale, ids, axis=1)
+            vsg = jnp.take(self.v_scale, ids, axis=1)
         store, owner = self.host_store, self.client_tag
 
-        def _publish(kg=kg, vg=vg, pend=tuple(pend)):
+        def _publish(kg=kg, vg=vg, ksg=ksg, vsg=vsg, pend=tuple(pend)):
             k_np, v_np = np.asarray(kg), np.asarray(vg)
+            ks_np = None if ksg is None else np.asarray(ksg)
+            vs_np = None if vsg is None else np.asarray(vsg)
             for j, (_b, key) in enumerate(pend):
-                store.put(key, k_np[:, j], v_np[:, j], owner=owner)
+                store.put(key, k_np[:, j], v_np[:, j], owner=owner,
+                          k_scale=None if ks_np is None else ks_np[:, j],
+                          v_scale=None if vs_np is None else vs_np[:, j])
 
         self.copy_engine.submit(_publish, tag="write_through")
 
@@ -738,7 +953,8 @@ class PagedKVCache:
         stream K/V in without token identity."""
         if not self.pool.can_allocate(prompt_len + self.block_size):
             return False  # backpressure: engine keeps the request queued
-        self.pool.allocate(seq_id, prompt_len + self.block_size)
+        self.reset_block_scales(
+            self.pool.allocate(seq_id, prompt_len + self.block_size))
         self.lengths[seq_id] = 0
         return True
 
@@ -755,10 +971,18 @@ class PagedKVCache:
     def write_token(self, seq_id: int, k_entry, v_entry):
         """k/v_entry: (G, KVH, hd) for the next position of seq_id."""
         pos = self.lengths[seq_id]
-        self.pool.extend_for(seq_id, pos + 1)
+        new_blk = self.pool.extend_for(seq_id, pos + 1)
+        if new_blk is not None:
+            self.reset_block_scales([new_blk])
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
-        self.k = write_paged(self.k, row, pos, k_entry, self.block_size)
-        self.v = write_paged(self.v, row, pos, v_entry, self.block_size)
+        if self.quantized:
+            self.k, self.k_scale = write_paged_chunk_q(
+                self.k, self.k_scale, row, pos, k_entry[:, None], self.block_size)
+            self.v, self.v_scale = write_paged_chunk_q(
+                self.v, self.v_scale, row, pos, v_entry[:, None], self.block_size)
+        else:
+            self.k = write_paged(self.k, row, pos, k_entry, self.block_size)
+            self.v = write_paged(self.v, row, pos, v_entry, self.block_size)
         self.lengths[seq_id] = pos + 1
 
     def write_prefill(self, seq_id: int, k_seq, v_seq):
@@ -766,15 +990,22 @@ class PagedKVCache:
         prompt (single scatter; no host loop)."""
         Lp = k_seq.shape[1]
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
-        self.k = write_paged_chunk(self.k, row, 0, k_seq, self.block_size)
-        self.v = write_paged_chunk(self.v, row, 0, v_seq, self.block_size)
+        if self.quantized:
+            self.k, self.k_scale = write_paged_chunk_q(
+                self.k, self.k_scale, row, 0, k_seq, self.block_size)
+            self.v, self.v_scale = write_paged_chunk_q(
+                self.v, self.v_scale, row, 0, v_seq, self.block_size)
+        else:
+            self.k = write_paged_chunk(self.k, row, 0, k_seq, self.block_size)
+            self.v = write_paged_chunk(self.v, row, 0, v_seq, self.block_size)
         self.lengths[seq_id] = Lp
 
     def sequence_view(self, seq_id: int) -> Tuple:
-        """Returns (k, v, valid): contiguous gathered view + validity mask."""
+        """Returns (k, v, valid): contiguous gathered view + validity mask
+        (dequantized to float32 for quantized pools)."""
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
-        k = gather_paged(self.k, row, self.max_blocks)
-        v = gather_paged(self.v, row, self.max_blocks)
+        k = gather_paged_dq(self.k, self.k_scale, row, self.max_blocks)
+        v = gather_paged_dq(self.v, self.v_scale, row, self.max_blocks)
         valid = paged_validity(row, self.lengths[seq_id], self.block_size, self.max_blocks)
         return k, v, valid
 

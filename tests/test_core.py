@@ -120,6 +120,37 @@ def test_lp_amplification():
     assert abs(plan.throughput - 25.0) < 1e-3  # B caps at 50; /2 amplification
 
 
+def test_lp_kv_capacity_scale():
+    """A 2x KV-capacity multiplier (int8 pools hold ~2x context per HBM
+    byte) folds into the generator's alpha like alpha_scale: the GPU stage's
+    50 req/s ceiling doubles, and at fixed offered load the LP provisions
+    proportionally fewer replicas."""
+    g = _two_stage_graph()  # B: 5 req/s per GPU, 10 GPUs -> caps at 50
+    base = solve_allocation(g, {"CPU": 100, "GPU": 10})
+    assert abs(base.throughput - 50.0) < 1e-3
+    scaled = solve_allocation(g, {"CPU": 100, "GPU": 10},
+                              kv_capacity_scale={"B": 2.0})
+    assert abs(scaled.throughput - 100.0) < 1e-3
+    lean = solve_allocation(g, {"CPU": 100, "GPU": 10}, source_rate=50.0,
+                            resource_penalty=0.01,
+                            kv_capacity_scale={"B": 2.0})
+    full = solve_allocation(g, {"CPU": 100, "GPU": 10}, source_rate=50.0,
+                            resource_penalty=0.01)
+    assert lean.instances["B"] < full.instances["B"]
+
+
+def test_generator_kv_capacity_scale_roundtrip():
+    """calibrate() writes the measured KV bytes/token pair and
+    kv_capacity_scale() reports baseline/current (1.0 when unmeasured)."""
+    from repro.core.components import Generator
+
+    gen = Generator()
+    assert gen.kv_capacity_scale() == 1.0
+    gen.calibrate({"kv_bytes_per_token": 514.0,
+                   "baseline_kv_bytes_per_token": 2048.0})
+    assert abs(gen.kv_capacity_scale() - 2048.0 / 514.0) < 1e-9
+
+
 @pytest.mark.parametrize(
     "n,seed",
     [(3, 0), (5, 17), (8, 42), (12, 7), (16, 99), (20, 3), (24, 123), (10, 1000)],

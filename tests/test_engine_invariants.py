@@ -17,7 +17,8 @@ def _cfg():
 def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
                   long_decode: bool = False, preempt: str = "recompute",
                   pipeline: bool = True, kernel: str = "reference",
-                  ragged: bool = True):
+                  ragged: bool = True, kv_dtype: str = None,
+                  greedy: bool = False):
     """Bursty seeded workload: waves of submits interleaved with engine steps.
     Prompts mix fresh random sequences with shared-retrieved-context prefixes
     (32 tokens = 2 full blocks at block_size=16). ``long_decode`` makes
@@ -28,7 +29,7 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
         _cfg(), max_batch=3, max_seq=96, n_blocks=n_blocks,
         prefill_chunk_size=16, token_budget=20,
         scheduler=scheduler, interleave=interleave, preempt=preempt,
-        pipeline=pipeline, kernel=kernel, ragged=ragged,
+        pipeline=pipeline, kernel=kernel, ragged=ragged, kv_dtype=kv_dtype,
     )
     ctx = rng.integers(0, 90, size=32).astype(np.int32)
     reqs = []
@@ -47,7 +48,7 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
             reqs.append(eng.submit(
                 prompt,
                 max_new=max_new,
-                temperature=float(rng.choice([0.0, 0.0, 0.8])),
+                temperature=0.0 if greedy else float(rng.choice([0.0, 0.0, 0.8])),
                 priority=float(rng.random()),
             ))
         for _ in range(int(rng.integers(0, 4))):  # partial progress mid-burst
@@ -206,6 +207,108 @@ def test_pallas_kernel_rejects_unsupported_modes():
         GenerationEngine(cfg, kernel="pallas", ragged=False)
     with pytest.raises(ValueError):
         GenerationEngine(cfg, kernel="mosaic-gpu")
+
+
+# ------------------------------------------------------------ int8 KV pools
+def _greedy_agreement(reqs_a, reqs_b) -> float:
+    match = total = 0
+    for a, b in zip(reqs_a, reqs_b):
+        n = min(len(a.out_tokens), len(b.out_tokens))
+        match += sum(int(x == y)
+                     for x, y in zip(a.out_tokens[:n], b.out_tokens[:n]))
+        total += n
+    return match / max(total, 1)
+
+
+# pinned accuracy contract for int8 pools vs float, measured over full greedy
+# sequences where one early flip cascades (random smoke weights leave tiny
+# argmax gaps, so whole-sequence agreement runs well below the per-step rate);
+# per-step logit error is bounded by the per-block absmax budget (see
+# tests/test_kernel_conformance.py QTOL)
+INT8_GREEDY_FLOOR = 0.75
+
+
+@pytest.mark.parametrize(
+    "seed,n_blocks,preempt,pipeline,long_decode",
+    [
+        (5, 6, "swap", True, True),    # forced preemption: host-tier scale
+                                       # round-trip + pipelined dispatch
+        (5, 6, "swap", False, True),   # same churn, sequential sync oracle
+        (4, 8, "recompute", True, False),  # backpressure, no preemption
+    ],
+)
+def test_int8_pool_greedy_agreement(seed, n_blocks, preempt, pipeline,
+                                    long_decode):
+    """int8 pools must track the float engine's greedy tokens within the
+    pinned floor — including across swap preemption (scales restored from
+    the host tier verbatim) and pipelined dispatch — and drain the pool as
+    clean as the float path."""
+    fp_eng, fp_reqs = _run_workload(
+        seed, n_blocks=n_blocks, scheduler="fifo", interleave=True,
+        long_decode=long_decode, preempt=preempt, pipeline=pipeline,
+        greedy=True)
+    q_eng, q_reqs = _run_workload(
+        seed, n_blocks=n_blocks, scheduler="fifo", interleave=True,
+        long_decode=long_decode, preempt=preempt, pipeline=pipeline,
+        kv_dtype="int8", greedy=True)
+    assert q_eng.kv_dtype == "int8" and q_eng.kv.quantized
+    if long_decode:
+        assert q_eng.preemptions >= 1
+    if preempt == "swap":
+        assert q_eng.swap_ins >= 1  # the host tier actually round-tripped
+    agree = _greedy_agreement(fp_reqs, q_reqs)
+    assert agree >= INT8_GREEDY_FLOOR, f"greedy agreement {agree:.1%}"
+    assert all(r.done for r in q_reqs)
+    pool = q_eng.kv.pool
+    assert pool.n_free == pool.n_blocks - 1  # zero leaked blocks
+    assert q_eng.kv.lengths == {}
+    if q_eng.host_store is not None:
+        assert q_eng.host_store.n_swapped == 0
+
+
+def test_int8_pipelined_matches_sync_oracle():
+    """Within the int8 engine, double-buffered dispatch must be token-
+    identical to the sync oracle across swap preemption — the quantized
+    state (pools AND scale pools) round-trips the host tier exactly."""
+    sync_eng, sync_reqs = _run_workload(
+        5, n_blocks=6, scheduler="fifo", interleave=True, long_decode=True,
+        preempt="swap", pipeline=False, kv_dtype="int8")
+    pip_eng, pip_reqs = _run_workload(
+        5, n_blocks=6, scheduler="fifo", interleave=True, long_decode=True,
+        preempt="swap", pipeline=True, kv_dtype="int8")
+    assert pip_eng.preemptions >= 1 and pip_eng.swap_ins >= 1
+    for a, b in zip(sync_reqs, pip_reqs):
+        assert a.out_tokens == b.out_tokens, (a.req_id, a.out_tokens,
+                                              b.out_tokens)
+
+
+def test_int8_pallas_kernel_matches_reference():
+    """kernel="pallas" on int8 pools (dequant inside the kernel) must be
+    token-identical to the XLA reference path on the same workload."""
+    ref_eng, ref_reqs = _run_workload(
+        2, n_blocks=8, scheduler="fifo", interleave=True,
+        kv_dtype="int8", kernel="reference")
+    pal_eng, pal_reqs = _run_workload(
+        2, n_blocks=8, scheduler="fifo", interleave=True,
+        kv_dtype="int8", kernel="pallas")
+    assert pal_eng.kernel == "pallas" and pal_eng.kv.quantized
+    for a, b in zip(ref_reqs, pal_reqs):
+        assert a.out_tokens == b.out_tokens, (a.req_id, a.out_tokens,
+                                              b.out_tokens)
+
+
+def test_quant_config_routes_to_paged_backend():
+    """Regression: ``kv_cache_quant`` configs used to be excluded from the
+    paged backend (dense fallback); pool-level int8 storage replaced that
+    path, so the same config now reports backend="paged" with int8 pools."""
+    cfg = _cfg().replace(kv_cache_quant=True)
+    eng = GenerationEngine(cfg, max_batch=2, max_seq=64)
+    assert eng.backend == "paged"
+    assert eng.kv_dtype == "int8" and eng.kv.quantized
+    assert eng.stats()["kv_dtype"] == "int8"
+    r = eng.submit(np.arange(12) % 50, max_new=4)
+    eng.run_until_done()
+    assert r.done and len(r.out_tokens) == 4
 
 
 # ----------------------------------------------- ragged layout round-trip

@@ -25,6 +25,10 @@ from repro.kernels.decode_attention import (
 
 ON_TPU = jax.default_backend() == "tpu"
 TOL = dict(rtol=2e-5, atol=2e-5)
+# int8 pools vs the fp32 oracle on the ORIGINAL values: the explicit error
+# budget the quantized serving path promises (per-block absmax, ~1/254 of
+# each block's absmax per element, amplified through the softmax)
+QTOL = dict(rtol=0.05, atol=0.08)
 
 
 # ------------------------------------------------------------------ builders
@@ -200,6 +204,90 @@ def test_paged_chunk_raw_minus_one_tables():
     case = _chunk_case(rng, B=4, kvh=2, g=1, hd=32, bs=4, mb=4, n_blocks=24)
     assert (np.asarray(case[3]) == -1).any()
     _assert_chunk_matches(case, interpret=True)
+
+
+# --------------------------------------------------- quantized (int8) pools
+def _quantize_pool(kp, vp):
+    """Per-(block, KV-head) absmax int8 quantization in the pool storage
+    layout: scales (n_blocks, KVH) f32, stored = clip(round(x/s)),
+    dequant = stored * s — the same contract ``paged_cache`` maintains."""
+    def q(x):
+        x = np.asarray(x)
+        s = np.abs(x).max(axis=(1, 3)) / 127.0                # (nb, KVH)
+        qx = np.clip(np.round(x / np.maximum(s, 1e-30)[:, None, :, None]),
+                     -127, 127)
+        return qx.astype(np.int8), s.astype(np.float32)
+
+    kq, ks = q(kp)
+    vq, vs = q(vp)
+    return kq, ks, vq, vs
+
+
+def _dequant(qx, s):
+    return jnp.asarray(qx.astype(np.float32) * s[:, None, :, None])
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_paged_decode_quantized_pool(seed):
+    """int8 decode kernel: bit-exact vs the fp oracle on the DEQUANTIZED
+    pool (the kernel's dequant is just ``q * s`` in VMEM), and inside the
+    explicit QTOL budget vs the fp32 oracle on the original values."""
+    rng = np.random.default_rng(400 + seed)
+    case = _decode_case(rng, B=int(rng.integers(1, 5)), kvh=2, g=2, hd=32,
+                        bs=8, mb=3, n_blocks=16)
+    q, kp, vp, tables, lengths = case
+    kq, ks, vq, vs = _quantize_pool(kp, vp)
+    got = paged_decode_attention(q, jnp.asarray(kq), jnp.asarray(vq), tables,
+                                 lengths, k_scale=jnp.asarray(ks),
+                                 v_scale=jnp.asarray(vs), interpret=True)
+    want_dq = ref_paged_decode_attention(q, _dequant(kq, ks), _dequant(vq, vs),
+                                         tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_dq), **TOL)
+    want_fp = ref_paged_decode_attention(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_fp), **QTOL)
+
+
+def test_paged_decode_quantized_raw_tables_with_holes():
+    """-1 pads and interior holes must be masked before the dequant multiply
+    — a hole block's garbage scale must never leak into the output."""
+    rng = np.random.default_rng(17)
+    case = _decode_case(rng, B=3, kvh=2, g=2, hd=32, bs=4, mb=6,
+                        n_blocks=24, lengths=[24, 20, 24], holes=True)
+    q, kp, vp, tables, lengths = case
+    assert (np.asarray(tables) == -1).any()
+    kq, ks, vq, vs = _quantize_pool(kp, vp)
+    got = paged_decode_attention(q, jnp.asarray(kq), jnp.asarray(vq), tables,
+                                 lengths, k_scale=jnp.asarray(ks),
+                                 v_scale=jnp.asarray(vs), interpret=True)
+    want = ref_paged_decode_attention(q, _dequant(kq, ks), _dequant(vq, vs),
+                                      tables, lengths)
+    assert np.all(np.isfinite(np.asarray(got)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_paged_chunk_quantized_pool(seed):
+    """int8 ragged-chunk kernel under RAW -1 tables and packed pad tokens:
+    same dual oracle as the decode case; pad rows stay finite."""
+    rng = np.random.default_rng(500 + seed)
+    case = _chunk_case(rng, B=int(rng.integers(2, 4)), kvh=2, g=2, hd=32,
+                       bs=4, mb=3, n_blocks=13,
+                       pad_tokens=int(rng.integers(1, 4)))
+    q, kp, vp, tables, row_of, slots, p_end, s_start = case
+    kq, ks, vq, vs = _quantize_pool(kp, vp)
+    got = paged_chunk_attention(q, jnp.asarray(kq), jnp.asarray(vq), tables,
+                                row_of, slots, p_end, s_start,
+                                k_scale=jnp.asarray(ks),
+                                v_scale=jnp.asarray(vs), interpret=True)
+    want_dq = ref_paged_chunk_attention(q, _dequant(kq, ks), _dequant(vq, vs),
+                                        tables, row_of, slots, p_end, s_start)
+    want_fp = ref_paged_chunk_attention(q, kp, vp, tables, row_of, slots,
+                                        p_end, s_start)
+    valid = np.asarray(row_of) >= 0
+    got = np.asarray(got)
+    assert np.all(np.isfinite(got)), "pad rows must be garbage-but-FINITE"
+    np.testing.assert_allclose(got[valid], np.asarray(want_dq)[valid], **TOL)
+    np.testing.assert_allclose(got[valid], np.asarray(want_fp)[valid], **QTOL)
 
 
 # -------------------------------------------------------------- compiled mode
