@@ -1,0 +1,7 @@
+"""Benchmark package: running any ``python -m benchmarks.X`` entry point
+first sets up the import roots (src/, benchmarks/, repo root) so the
+individual benchmarks can use plain ``from _report import ...`` /
+``from benchmarks.common import ...`` without per-file path boilerplate."""
+from benchmarks._report import ensure_import_paths
+
+ensure_import_paths()

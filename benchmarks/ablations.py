@@ -36,8 +36,5 @@ def main(rate: float = 64.0, fast: bool = False):
 
 
 if __name__ == "__main__":
-    try:
-        from _report import smoke_flag
-    except ImportError:
-        from benchmarks._report import smoke_flag
+    from _report import smoke_flag
     main(fast=smoke_flag(__doc__))

@@ -27,10 +27,7 @@ import time
 
 import numpy as np
 
-try:
-    from _report import print_table, smoke_flag
-except ImportError:  # imported as a package module (benchmarks.run)
-    from benchmarks._report import print_table, smoke_flag
+from _report import print_table, smoke_flag
 
 import jax
 

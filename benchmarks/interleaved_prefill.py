@@ -14,10 +14,7 @@ from __future__ import annotations
 
 import time
 
-try:
-    from _report import LAT_KEYS, latency_row, print_table, smoke_flag
-except ImportError:  # imported as a package module (benchmarks.run)
-    from benchmarks._report import LAT_KEYS, latency_row, print_table, smoke_flag
+from _report import LAT_KEYS, latency_row, print_table, smoke_flag
 
 import jax
 import numpy as np

@@ -13,10 +13,7 @@ import time
 
 import argparse
 
-try:
-    from _report import latency_row, print_latency_ms
-except ImportError:  # imported as a package module (benchmarks.run)
-    from benchmarks._report import latency_row, print_latency_ms
+from _report import latency_row, print_latency_ms
 
 import jax
 import numpy as np

@@ -79,9 +79,6 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    try:
-        from _report import smoke_flag
-    except ImportError:
-        from benchmarks._report import smoke_flag
+    from _report import smoke_flag
     smoke_flag(__doc__)  # uniform CLI; this benchmark's fast mode IS the default
     main(fast=True)

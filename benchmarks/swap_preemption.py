@@ -34,12 +34,8 @@ import time
 
 import numpy as np
 
-try:
-    from _report import print_latency_ms, print_table
-    from paged_vs_dense import greedy_agreement, kv_block_bytes
-except ImportError:  # imported as a package module (benchmarks.run)
-    from benchmarks._report import print_latency_ms, print_table
-    from benchmarks.paged_vs_dense import greedy_agreement, kv_block_bytes
+from _report import print_latency_ms, print_table
+from paged_vs_dense import greedy_agreement, kv_block_bytes
 
 import jax
 

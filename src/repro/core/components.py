@@ -126,6 +126,13 @@ class Generator(Component):
     # prefill compute — much cheaper than recompute, not free like an HBM hit
     host_hit_rate = 0.0
     host_promote_per_token_s = 1.2e-6
+    # multi-turn session-history hits (serving.session.Session): conversation
+    # history promoted from the host tier between turns. Same physical cost as
+    # a doc promotion (a host->device block copy), but a distinct class —
+    # disjoint from host_hit_rate — because its magnitude tracks session mix /
+    # turn depth rather than doc popularity, so the LP's provisioning feedback
+    # must not conflate the two signals.
+    session_hit_rate = 0.0
     # chunked-prefill TTFT term: with Sarathi-style interleaving the prompt
     # streams through budget-bounded chunks that share each step with decode,
     # so time-to-first-token has its own (steeper) per-token slope than the
@@ -251,22 +258,40 @@ class Generator(Component):
                 return float(measure(default=self.host_hit_rate))
         return self.host_hit_rate
 
-    def _tier_rates(self, hit_rate, host_hit_rate):
-        """Resolve (HBM, host) hit fractions; the tiers partition the prompt,
-        so the host share is clamped into the remainder of the HBM share."""
+    def effective_session_hit_rate(self) -> float:
+        """Session-history hit rate to bill (measured when warm, else the
+        static ``session_hit_rate``) — same cold-start fallback as
+        ``effective_hit_rate``. Disjoint from the doc host class."""
+        eng = self.engine
+        if eng is not None:
+            measure = getattr(eng, "measured_session_hit_rate", None)
+            if measure is not None:
+                return float(measure(default=self.session_hit_rate))
+        return self.session_hit_rate
+
+    def _tier_rates(self, hit_rate, host_hit_rate, session_hit_rate=None):
+        """Resolve (HBM, host-doc, host-session) hit fractions; the classes
+        partition the prompt, so each later class is clamped into the
+        remainder of the earlier ones."""
         h = self.effective_hit_rate() if hit_rate is None else hit_rate
         hh = self.effective_host_hit_rate() if host_hit_rate is None else host_hit_rate
-        return h, min(max(hh, 0.0), max(1.0 - h, 0.0))
+        sh = (self.effective_session_hit_rate()
+              if session_hit_rate is None else session_hit_rate)
+        hh = min(max(hh, 0.0), max(1.0 - h, 0.0))
+        sh = min(max(sh, 0.0), max(1.0 - h - hh, 0.0))
+        return h, hh, sh
 
     def estimate_time(self, features, hit_rate: Optional[float] = None,
-                      host_hit_rate: Optional[float] = None):
-        h, hh = self._tier_rates(hit_rate, host_hit_rate)
+                      host_hit_rate: Optional[float] = None,
+                      session_hit_rate: Optional[float] = None):
+        h, hh, sh = self._tier_rates(hit_rate, host_hit_rate, session_hit_rate)
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
         tout = features.get("tokens_out", self.max_new)
-        # three-tier prompt: HBM-shared tokens are free, host-promoted tokens
-        # cost the copy, the rest pays full prefill compute
-        prefill = tin * ((1.0 - h - hh) * self.prefill_per_token_s
-                         + hh * self.host_promote_per_token_s)
+        # tiered prompt: HBM-shared tokens are free, host-promoted tokens
+        # (doc and session-history classes alike) cost the copy, the rest
+        # pays full prefill compute
+        prefill = tin * ((1.0 - h - hh - sh) * self.prefill_per_token_s
+                         + (hh + sh) * self.host_promote_per_token_s)
         avg_ctx = tin + 0.5 * tout  # mean context length over the decode
         decode = tout * (
             self.decode_per_token_s + avg_ctx * self.decode_cache_per_ctx_token_s
@@ -277,18 +302,19 @@ class Generator(Component):
         return self.base_time_s + (prefill + decode) / self.tp_speedup()
 
     def estimate_ttft(self, features, hit_rate: Optional[float] = None,
-                      host_hit_rate: Optional[float] = None):
+                      host_hit_rate: Optional[float] = None,
+                      session_hit_rate: Optional[float] = None):
         """Time-to-first-token under chunked interleaved prefill: the
         non-shared prompt tokens stream through token-budget chunks, so TTFT
         scales with computed prompt tokens at the interleaved (per-step) rate
         rather than the saturated prefill throughput; host-promoted tokens
-        pay the copy rate instead. TP divides the per-chunk compute like
-        every other token term."""
-        h, hh = self._tier_rates(hit_rate, host_hit_rate)
+        (either class) pay the copy rate instead. TP divides the per-chunk
+        compute like every other token term."""
+        h, hh, sh = self._tier_rates(hit_rate, host_hit_rate, session_hit_rate)
         tin = features.get("tokens_in", 128) + features.get("docs_tokens", 0)
         return self.base_time_s + tin * (
-            (1.0 - h - hh) * self.ttft_per_prefill_token_s
-            + hh * self.host_promote_per_token_s
+            (1.0 - h - hh - sh) * self.ttft_per_prefill_token_s
+            + (hh + sh) * self.host_promote_per_token_s
         ) / self.tp_speedup()
 
     def output_features(self, features):
@@ -316,15 +342,16 @@ class Grader(Generator):
         return rnd < threshold
 
     def estimate_time(self, features, hit_rate: Optional[float] = None,
-                      host_hit_rate: Optional[float] = None):
+                      host_hit_rate: Optional[float] = None,
+                      session_hit_rate: Optional[float] = None):
         # reads the full retrieved context; ~1.8x the generator's runtime in
         # C-RAG per the paper's Fig. 10 measurement. Shared document blocks
         # discount this prefill-dominated stage like any Generator (host-
-        # promoted blocks at the copy rate).
-        h, hh = self._tier_rates(hit_rate, host_hit_rate)
+        # promoted blocks, either class, at the copy rate).
+        h, hh, sh = self._tier_rates(hit_rate, host_hit_rate, session_hit_rate)
         tin = features.get("docs_tokens", 10000) + features.get("tokens_in", 0)
-        prefill = tin * ((1.0 - h - hh) * self.prefill_per_token_s * 3
-                         + hh * self.host_promote_per_token_s)
+        prefill = tin * ((1.0 - h - hh - sh) * self.prefill_per_token_s * 3
+                         + (hh + sh) * self.host_promote_per_token_s)
         return self.base_time_s + prefill + self.decode_per_token_s
 
 

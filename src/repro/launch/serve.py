@@ -4,6 +4,7 @@ model with batched requests via the generation engine.
 
     PYTHONPATH=src python -m repro.launch.serve --app crag --rate 32 --duration 30
     PYTHONPATH=src python -m repro.launch.serve --real --arch smollm-135m
+    PYTHONPATH=src python -m repro.launch.serve --pipelines --rate 10 --duration 2
 """
 from __future__ import annotations
 
@@ -109,9 +110,49 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
         print(f"[serve:real] fused-step collectives: {eng.audit_collectives()}")
 
 
+def serve_pipelines(arch: str, rate: float, duration: float, *,
+                    arrival: str = "poisson", session_fraction: float = 0.3,
+                    host_blocks: int = 128, seed: int = 0,
+                    wall_clock: bool = False):
+    """Adaptive RAG pipelines open-loop on the real engine: a seeded
+    ``core.workload`` trace of mixed SLO classes (multi-turn sessions
+    included) replays through ``apps.OpenLoopDriver`` with EDF-slack
+    priorities; reports per-class violation rate and the session-KV reuse
+    the host tier delivered."""
+    from repro.apps import OpenLoopDriver, VirtualClock, WallClock, make_app
+    from repro.configs import get_arch, smoke_variant
+    from repro.core.workload import DEFAULT_CLASSES, WorkloadSpec, generate
+    from repro.serving.engine import GenerationEngine
+
+    cfg = smoke_variant(get_arch(arch))
+    eng = GenerationEngine(cfg, max_batch=4, max_seq=256,
+                           prefill_chunk_size=32, token_budget=64,
+                           scheduler="edf_slack", host_blocks=host_blocks)
+    apps = {c.name: make_app(c.name, engine=eng) for c in DEFAULT_CLASSES}
+    spec = WorkloadSpec(rate_rps=rate, duration_s=duration, arrival=arrival,
+                        session_fraction=session_fraction, think_time_s=0.3)
+    clock = WallClock() if wall_clock else VirtualClock(dt=0.02)
+    drv = OpenLoopDriver(eng, apps, generate(spec, seed=seed), clock=clock,
+                         seed=seed)
+    drv.run()
+    for name, s in sorted(drv.violation_summary().items()):
+        print(f"[serve:pipelines] {name}: {int(s['completed'])} done "
+              f"viol={100 * s['violation_rate']:.1f}% "
+              f"mean_e2e={s['mean_latency_s']:.3f}s")
+    st = eng.stats()
+    ls = eng.latency_summary()
+    print(f"[serve:pipelines] session KV: "
+          f"{st.get('session_shared_tokens', 0)} HBM-shared tokens, "
+          f"{st.get('session_hit_tokens', 0)} host-promoted tokens "
+          f"(session_hit_rate={ls.get('session_hit_rate', 0.0):.3f})")
+    return drv
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--app", default="vrag", choices=["vrag", "crag", "srag", "arag"])
+    ap.add_argument("--app", default="vrag",
+                    choices=["vrag", "crag", "srag", "arag", "graphrag",
+                             "planrag"])
     ap.add_argument("--engine", default="patchwork", choices=list(ENGINES))
     ap.add_argument("--rate", type=float, default=32.0)
     ap.add_argument("--duration", type=float, default=30.0)
@@ -146,8 +187,27 @@ def main(argv=None):
                     help="host-memory block-tier capacity (0 = no host tier "
                          "unless --preempt swap provisions one); shared "
                          "across --dp replicas for cross-replica doc reuse")
+    ap.add_argument("--pipelines", action="store_true",
+                    help="replay a seeded open-loop trace of mixed RAG "
+                         "pipelines (sessions included) on the real engine "
+                         "and report per-SLO-class violation rates")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "diurnal", "bursty"],
+                    help="arrival process for --pipelines traces")
+    ap.add_argument("--sessions", type=float, default=0.3,
+                    help="fraction of --pipelines arrivals opening "
+                         "multi-turn sessions")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="pace --pipelines arrivals in real time instead of "
+                         "the deterministic virtual clock")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.real:
+    if args.pipelines:
+        serve_pipelines(args.arch, args.rate, args.duration,
+                        arrival=args.arrival, session_fraction=args.sessions,
+                        host_blocks=args.host_blocks or 128, seed=args.seed,
+                        wall_clock=args.wall_clock)
+    elif args.real:
         serve_real(args.arch, tp=args.tp, dp=args.dp, preempt=args.preempt,
                    host_blocks=args.host_blocks, pipeline=not args.no_pipeline,
                    kernel=args.kernel, kv_dtype=args.kv_dtype)

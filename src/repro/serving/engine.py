@@ -136,7 +136,15 @@ class Request:
     done: bool = False
     truncated: bool = False          # prompt exceeded engine capacity
     shared_prefix_tokens: int = 0    # prompt tokens served from HBM-shared blocks
-    host_prefix_tokens: int = 0      # prompt tokens promoted from the host tier
+    host_prefix_tokens: int = 0      # non-session prompt tokens promoted from host
+    # multi-turn session hit class (serving.session.Session): conversation-
+    # history (KIND_HISTORY) hit tokens, split out of the two tiers above.
+    # session_shared_tokens is a SUBSET of shared_prefix_tokens (HBM hits are
+    # free either way); session_host_tokens is DISJOINT from
+    # host_prefix_tokens, so host promotions partition into doc vs session
+    # classes for telemetry and the Generator cost model.
+    session_shared_tokens: int = 0
+    session_host_tokens: int = 0
     segprompt: Optional[SegmentedPrompt] = None  # retrieval-aware structure
     layout: Any = None               # SegmentLayout (built at admission)
     probe_layout: Any = None         # residency-probe layout (pre-admission)
@@ -169,8 +177,16 @@ class Request:
     @property
     def host_hit_rate(self) -> float:
         """Fraction of the prompt promoted from the host tier (the
-        second-chance hit class between an HBM hit and a prefill miss)."""
+        second-chance hit class between an HBM hit and a prefill miss),
+        excluding session-history promotions (``session_hit_rate``)."""
         return self.host_prefix_tokens / self.prefill_cap if self.prefill_cap else 0.0
+
+    @property
+    def session_hit_rate(self) -> float:
+        """Fraction of the prompt that is session history promoted from the
+        host tier — the multi-turn hit class, disjoint from
+        ``host_hit_rate``."""
+        return self.session_host_tokens / self.prefill_cap if self.prefill_cap else 0.0
 
 
 def normalize_spans(spans) -> List:
@@ -533,9 +549,12 @@ class GenerationEngine:
             s["utilization"] = self.kv.utilization()
             s["prefix_hit_tokens"] = self.kv.shared_token_hits
             s["host_hit_tokens"] = self.kv.host_token_hits
+            s["session_hit_tokens"] = self.kv.session_host_token_hits
+            s["session_shared_tokens"] = self.kv.session_token_hits
             s["free_blocks"] = self.kv.pool.n_free
             s["measured_hit_rate"] = self.measured_hit_rate()
             s["measured_host_hit_rate"] = self.measured_host_hit_rate()
+            s["measured_session_hit_rate"] = self.measured_session_hit_rate()
             s["tp_degree"] = self.pool_layout.tp_degree if self.pool_layout else 1
             s["preempt"] = self.preempt
             s["kv_dtype"] = self.kv_dtype or str(jnp.dtype(self.cfg.dtype))
@@ -707,10 +726,20 @@ class GenerationEngine:
     def measured_host_hit_rate(self, window: int = 256,
                                min_tokens: Optional[int] = None,
                                default: Optional[float] = None) -> float:
-        """Rolling token-weighted host-tier hit rate (prompt tokens promoted
-        from the host store), with the same cold-start clamp as
-        ``measured_hit_rate``."""
+        """Rolling token-weighted host-tier hit rate (non-session prompt
+        tokens promoted from the host store), with the same cold-start clamp
+        as ``measured_hit_rate``."""
         return self._measured_rate(lambda r: r.host_prefix_tokens,
+                                   window, min_tokens, default)
+
+    def measured_session_hit_rate(self, window: int = 256,
+                                  min_tokens: Optional[int] = None,
+                                  default: Optional[float] = None) -> float:
+        """Rolling token-weighted session-history hit rate (conversation-
+        history tokens promoted from the host store between turns — disjoint
+        from ``measured_host_hit_rate``'s doc class), same cold-start
+        clamp."""
+        return self._measured_rate(lambda r: r.session_host_tokens,
                                    window, min_tokens, default)
 
     def latency_summary(self) -> Dict[str, float]:
@@ -753,6 +782,12 @@ class GenerationEngine:
             )
             out["host_hit_rate"] = float(
                 sum(r.host_prefix_tokens for r in capped)
+                / sum(r.prefill_cap for r in capped)
+            )
+            # the multi-turn session hit class: history KV promoted from the
+            # host tier between turns, reported separately from doc hits
+            out["session_hit_rate"] = float(
+                sum(r.session_host_tokens for r in capped)
                 / sum(r.prefill_cap for r in capped)
             )
         return out
@@ -819,7 +854,12 @@ class GenerationEngine:
         req.layout = layout
         req.shared_spans = normalize_spans(adm.shared_spans)
         req.shared_prefix_tokens = adm.n_shared
-        req.host_prefix_tokens = adm.n_host
+        # host promotions partition into the doc/other class and the session-
+        # history class (multi-turn conversations) — disjoint counters, same
+        # promote cost, separately measured hit rates
+        req.host_prefix_tokens = adm.n_host - adm.n_host_session
+        req.session_shared_tokens = adm.n_shared_session
+        req.session_host_tokens = adm.n_host_session
         return True
 
     # ----------------------------------------------------- swap preemption
@@ -1221,6 +1261,8 @@ class GenerationEngine:
         )
         victim.shared_prefix_tokens = 0
         victim.host_prefix_tokens = 0
+        victim.session_shared_tokens = 0
+        victim.session_host_tokens = 0
         victim.shared_spans = []
         victim.layout = None
         victim.probe_layout = None  # continuation content changed

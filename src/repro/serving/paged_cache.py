@@ -467,11 +467,21 @@ class Admission:
     ``shared_spans`` covers BOTH hit classes — HBM-shared blocks and blocks
     promoted from the host tier hold exact KV either way, so the prefill
     cursor may skip all of them; ``n_shared``/``n_host`` split the token
-    counts per tier for the telemetry/cost-model feedback paths."""
+    counts per tier for the telemetry/cost-model feedback paths.
+
+    Session-history blocks (``segments.KIND_HISTORY``, multi-turn
+    conversations) are additionally classified out of each tier:
+    ``n_shared_session <= n_shared`` and ``n_host_session <= n_host`` count
+    the subset of hit tokens that are conversation history — the very
+    prefix-heavy hit class the host tier carries between turns, reported
+    separately from doc hits in ``latency_summary`` and the Generator cost
+    model."""
 
     n_shared: int                       # prompt tokens served from HBM-shared blocks
     shared_spans: List[Tuple[int, int]]  # token ranges prefill may skip
     n_host: int = 0                     # prompt tokens promoted from the host tier
+    n_shared_session: int = 0           # session-history subset of n_shared
+    n_host_session: int = 0             # session-history subset of n_host
 
 
 class PoolArrays:
@@ -594,6 +604,10 @@ class PagedKVCache:
         self._block_key: Dict[int, bytes] = {}      # reverse map for eviction
         self.shared_token_hits = 0                  # prompt tokens served from shared blocks
         self.host_token_hits = 0                    # prompt tokens promoted from host
+        # session-history (KIND_HISTORY) subsets of the two counters above —
+        # the multi-turn hit class, tracked separately from doc hits
+        self.session_token_hits = 0
+        self.session_host_token_hits = 0
 
     # k/v proxy the shared PoolArrays box: DP replicas see each other's
     # functional updates; the single-engine case is a plain attribute pair
@@ -835,9 +849,17 @@ class PagedKVCache:
             self._promote_host_blocks([(b, k) for _o, b, k in promote])
         n_shared = len(hits) * bs
         n_host = len(promote) * bs
+        # session-history classification: a hit block whose span lies inside a
+        # KIND_HISTORY segment is the multi-turn hit class, split out of each
+        # tier's count (empty set for prompts without history segments)
+        hist = layout.history_block_set() if layout.seg_spans else set()
+        n_shared_session = sum(bs for o in hits if o in hist)
+        n_host_session = sum(bs for o, _b, _k in promote if o in hist)
         self.lengths[seq_id] = 0
         self.shared_token_hits += n_shared
         self.host_token_hits += n_host
+        self.session_token_hits += n_shared_session
+        self.session_host_token_hits += n_host_session
         spans: List[Tuple[int, int]] = []
         for ordinal in sorted(set(hits) | {o for o, _b, _k in promote}):
             lo, hi = ordinal * bs, (ordinal + 1) * bs
@@ -845,7 +867,9 @@ class PagedKVCache:
                 spans[-1] = (spans[-1][0], hi)
             else:
                 spans.append((lo, hi))
-        return Admission(n_shared, spans, n_host)
+        return Admission(n_shared, spans, n_host,
+                         n_shared_session=n_shared_session,
+                         n_host_session=n_host_session)
 
     def register_prefix(self, seq_id: int, tokens, layout=None):
         """Publish this sequence's fully written prompt blocks into the prefix

@@ -42,6 +42,13 @@ import numpy as np
 KIND_SYSTEM = "system"   # prelude: fully causal, position == slot
 KIND_DOC = "doc"         # order-independent: attends prelude + self
 KIND_TAIL = "tail"       # query / generation prompt: attends everything
+# Multi-turn conversation history (serving.session.Session). Layout semantics
+# are identical to KIND_SYSTEM — a leading history segment is prelude, fully
+# causal, keyed by the legacy whole-prefix chain — but the kind survives into
+# ``seg_spans`` so admission can classify its block hits as the session hit
+# class (host-tier promotions of history KV are counted separately from doc
+# promotions in telemetry and the Generator cost model).
+KIND_HISTORY = "history"
 
 
 @dataclass(frozen=True)
@@ -149,6 +156,23 @@ class SegmentLayout:
     @property
     def n_tokens(self) -> int:
         return int(len(self.tokens))
+
+    def history_block_set(self) -> set:
+        """Block ordinals lying ENTIRELY inside a conversation-history segment
+        (``KIND_HISTORY``) — the session hit class. Blocks straddling a
+        history/non-history boundary are conservatively classified as ordinary
+        blocks (they are either unkeyed straddlers or prelude-chain blocks
+        whose tokens are not purely history)."""
+        out: set = set()
+        bs = self.block_size
+        for start, end, kind in self.seg_spans:
+            if kind != KIND_HISTORY:
+                continue
+            b = -(-start // bs)               # first block fully >= start
+            while (b + 1) * bs <= end:
+                out.add(b)
+                b += 1
+        return out
 
 
 def _h(*parts: bytes) -> bytes:

@@ -1,0 +1,56 @@
+"""Every benchmark must import cleanly both ways it is invoked.
+
+The benchmarks used to carry per-file ``try: from _report import ...
+except ImportError: from benchmarks._report import ...`` boilerplate; that
+now lives once in ``benchmarks._report.ensure_import_paths`` (called by the
+package ``__init__`` for ``python -m benchmarks.X`` and by importing
+``_report`` for direct-script runs). These tests pin both entry styles so
+the dedupe cannot silently break either one.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(REPO, "benchmarks")
+
+MODULES = sorted(
+    f[:-3] for f in os.listdir(BENCH)
+    if f.endswith(".py") and not f.startswith("__")
+)
+
+
+def _run(code: str, cwd: str, pythonpath: str) -> None:
+    env = dict(os.environ, PYTHONPATH=pythonpath)
+    r = subprocess.run([sys.executable, "-c", code], cwd=cwd, env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+def test_modules_discovered():
+    assert "slo_violations" in MODULES and "_report" in MODULES
+
+
+def test_package_mode_imports():
+    """``python -m benchmarks.X`` style: package import from the repo root."""
+    code = "; ".join(f"import benchmarks.{m}" for m in MODULES)
+    _run(code, cwd=REPO, pythonpath=os.path.join(REPO, "src"))
+
+
+def test_script_mode_imports():
+    """Direct-script style: bare module names resolved from benchmarks/."""
+    code = "; ".join(f"import {m}" for m in MODULES)
+    _run(code, cwd=BENCH,
+         pythonpath=os.pathsep.join([os.path.join(REPO, "src"), REPO]))
+
+
+def test_no_dual_import_boilerplate():
+    """The try/except dual-import idiom must not creep back in."""
+    offenders = []
+    for m in MODULES:
+        with open(os.path.join(BENCH, m + ".py")) as f:
+            if "except ImportError" in f.read():
+                offenders.append(m)
+    assert not offenders, f"dual-import boilerplate back in: {offenders}"

@@ -415,3 +415,131 @@ def test_ragged_plan_round_trips_to_padded_layout(seed, n_blocks):
     # the packed layout actually removed padding work
     assert rag_eng.stats()["padded_token_fraction"] < \
         pad_eng.stats()["padded_token_fraction"]
+
+
+# --------------------------------------------------------- multi-turn sessions
+def _run_session_workload(seed, *, n_blocks=10, host_blocks=64, turns=3,
+                          pipeline=True, scheduler="fifo", filler=True):
+    """One multi-turn session on a tiny pool, with unique random filler
+    requests between turns so the warm LRU must demote the session's history
+    blocks to the host tier — the next turn's admission then promotes them
+    back as the session hit class. All rng draws happen in a fixed order so
+    pipelined/sync and session/flat variants see identical workloads."""
+    from repro.serving.session import Session
+
+    rng = np.random.default_rng(seed)
+    eng = GenerationEngine(
+        _cfg(), max_batch=2, max_seq=160, n_blocks=n_blocks,
+        prefill_chunk_size=16, token_budget=20, scheduler=scheduler,
+        pipeline=pipeline, host_blocks=host_blocks,
+    )
+    sess = Session(session_id=0, system_tokens=rng.integers(0, 90, size=20))
+    turn_reqs, fillers = [], []
+    for _ in range(turns):
+        q = rng.integers(0, 90, size=12).astype(np.int32)
+        r = eng.submit(sess.prompt(q), max_new=6, temperature=0.0)
+        if filler:
+            fillers += [eng.submit(rng.integers(0, 90, size=40), max_new=2,
+                                   temperature=0.0) for _ in range(3)]
+        eng.run_until_done(max_steps=2000)
+        sess.commit(q, r.out_tokens)
+        turn_reqs.append(r)
+    return eng, sess, turn_reqs, fillers
+
+
+@pytest.mark.parametrize(
+    "seed,pipeline,scheduler",
+    [
+        (0, True, "fifo"),
+        (1, True, "edf_slack"),
+        (0, False, "fifo"),     # sequential sync oracle under session load
+    ],
+)
+def test_session_invariants_after_drain(seed, pipeline, scheduler):
+    """Session turns must leave BOTH tiers pristine after drain, and their
+    history reuse must surface as the session hit class — separate from doc
+    promotions, which a no-doc workload keeps at exactly zero."""
+    eng, sess, turn_reqs, fillers = _run_session_workload(
+        seed, pipeline=pipeline, scheduler=scheduler)
+    assert all(r.done for r in turn_reqs + fillers)
+
+    # HBM pool drains to scratch-only, exactly like the sessionless harness
+    pool = eng.kv.pool
+    assert pool.n_free == pool.n_blocks - 1
+    assert pool.tables == {_NULL_SEQ: [eng._null_block]}
+    assert eng.kv.lengths == {}
+    # host tier refcount-clean: keyed blocks + free slots close the capacity
+    hs = eng.host_store
+    assert hs.n_swapped == 0
+    assert len(hs.free) + hs.n_keyed == hs.n_blocks
+
+    # the session class actually fired: later turns re-read earlier history
+    # from HBM and/or via host promotion, and the tiny pool forced at least
+    # one host promotion across the run
+    assert turn_reqs[0].session_shared_tokens == 0  # first turn has no past
+    reused = sum(r.session_shared_tokens + r.session_host_tokens
+                 for r in turn_reqs[1:])
+    promoted = sum(r.session_host_tokens for r in turn_reqs)
+    assert reused > 0
+    assert promoted > 0
+    # accounting partition: session HBM hits are a subset of shared-prefix
+    # hits; session promotions are disjoint from (zero, here) doc promotions
+    for r in turn_reqs:
+        assert r.session_shared_tokens <= r.shared_prefix_tokens
+        assert r.session_shared_tokens + r.session_host_tokens \
+            + r.host_prefix_tokens <= r.prefill_cap
+    assert all(r.host_prefix_tokens == 0 for r in turn_reqs + fillers)
+    assert all(r.session_host_tokens == 0 for r in fillers)
+
+    # the distinct hit class reaches the reported summaries
+    lat = eng.latency_summary()
+    assert lat["session_hit_rate"] > 0.0
+    assert lat["host_hit_rate"] == 0.0
+    st = eng.stats()
+    assert st["session_hit_tokens"] == eng.kv.session_host_token_hits > 0
+    assert st["session_shared_tokens"] == eng.kv.session_token_hits > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_session_greedy_parity_with_flat_history(seed):
+    """Sessions are a prompt-shaping layer only: carrying the history as a
+    KIND_HISTORY segment (with all its block reuse) must produce exactly the
+    tokens of resubmitting the same conversation as flat prompts with
+    sessions disabled."""
+    eng, sess, turn_reqs, _ = _run_session_workload(seed)
+
+    rng = np.random.default_rng(seed)   # replay the identical draw order
+    flat_eng = GenerationEngine(
+        _cfg(), max_batch=2, max_seq=160, n_blocks=10,
+        prefill_chunk_size=16, token_budget=20, host_blocks=64,
+    )
+    history = rng.integers(0, 90, size=20).astype(np.int32)
+    flat_reqs = []
+    for _ in range(len(turn_reqs)):
+        q = rng.integers(0, 90, size=12).astype(np.int32)
+        r = flat_eng.submit(np.concatenate([history, q]), max_new=6,
+                            temperature=0.0)
+        fill = [flat_eng.submit(rng.integers(0, 90, size=40), max_new=2,
+                                temperature=0.0) for _ in range(3)]
+        flat_eng.run_until_done(max_steps=2000)
+        history = np.concatenate(
+            [history, q, np.asarray(r.out_tokens, np.int32)])
+        flat_reqs.append(r)
+        del fill
+    for a, b in zip(turn_reqs, flat_reqs):
+        assert a.out_tokens == b.out_tokens, (a.req_id, a.out_tokens,
+                                              b.out_tokens)
+    # and the flat run never classified anything as session reuse
+    assert flat_eng.stats()["session_hit_tokens"] == 0
+
+
+@pytest.mark.parametrize("seed,scheduler", [(0, "fifo"), (1, "edf_slack")])
+def test_session_pipelined_matches_sync(seed, scheduler):
+    """Double-buffered dispatch stays token-identical to the sync oracle
+    under multi-turn session load (history blocks demoting/promoting through
+    the host tier between turns)."""
+    sync = _run_session_workload(seed, pipeline=False, scheduler=scheduler)
+    pip = _run_session_workload(seed, pipeline=True, scheduler=scheduler)
+    for a, b in zip(sync[2] + sync[3], pip[2] + pip[3]):
+        assert a.out_tokens == b.out_tokens, (a.req_id, a.out_tokens,
+                                              b.out_tokens)

@@ -1,0 +1,139 @@
+"""Direct tests for the online slack predictor (core/slack.py): RLS
+recovery of a known linear law, forgetting under workload drift,
+non-negative predictions, and the fallback-mean warmup regime."""
+import numpy as np
+import pytest
+
+from repro.core.slack import FEATURES, OnlineLinearRegression, SlackModel
+
+
+def _feats(rng):
+    return {"tokens_in": float(rng.integers(8, 512)),
+            "tokens_out": float(rng.integers(1, 64)),
+            "k_docs": float(rng.integers(0, 8)),
+            "docs_tokens": float(rng.integers(0, 2048)),
+            "iteration": float(rng.integers(0, 4))}
+
+
+# ----------------------------------------------------------- RLS recovery
+def test_rls_recovers_linear_ground_truth():
+    """Feed y = b + w.x (noiseless): after enough updates the model must
+    predict unseen points to within a tight relative error."""
+    rng = np.random.default_rng(0)
+    w_true = np.array([0.3, 0.05, 0.8, 0.2, 0.4])
+    b_true = 0.01
+    m = OnlineLinearRegression(len(w_true))
+    for _ in range(200):
+        x = rng.uniform(0.0, 2.0, size=len(w_true))
+        m.update(x, b_true + float(w_true @ x))
+    for _ in range(20):
+        x = rng.uniform(0.0, 2.0, size=len(w_true))
+        y = b_true + float(w_true @ x)
+        assert m.predict(x) == pytest.approx(y, rel=0.02, abs=1e-3)
+
+
+def test_rls_recovery_under_noise():
+    rng = np.random.default_rng(1)
+    w_true = np.array([0.5, 0.1])
+    m = OnlineLinearRegression(2)
+    for _ in range(600):
+        x = rng.uniform(0.0, 2.0, size=2)
+        m.update(x, float(w_true @ x) + rng.normal(0.0, 0.01))
+    errs = []
+    for _ in range(50):
+        x = rng.uniform(0.0, 2.0, size=2)
+        errs.append(abs(m.predict(x) - float(w_true @ x)))
+    assert np.mean(errs) < 0.02
+
+
+# ----------------------------------------------------- forgetting / drift
+def test_forgetting_tracks_workload_drift():
+    """With lam < 1 the estimator must abandon the old regime: after the
+    per-unit cost quadruples mid-stream, predictions converge to the new
+    law rather than averaging the two."""
+    rng = np.random.default_rng(2)
+    m = OnlineLinearRegression(1, lam=0.98)
+    for _ in range(300):
+        x = rng.uniform(0.5, 2.0, size=1)
+        m.update(x, 0.1 * float(x[0]))
+    old = m.predict([1.0])
+    assert old == pytest.approx(0.1, rel=0.05)
+    for _ in range(300):
+        x = rng.uniform(0.5, 2.0, size=1)
+        m.update(x, 0.4 * float(x[0]))
+    new = m.predict([1.0])
+    assert new == pytest.approx(0.4, rel=0.05)
+    assert abs(new - 0.4) < abs(new - 0.25)  # not stuck at the blend
+
+
+def test_no_forgetting_averages_instead():
+    """Control for the drift test: lam=1.0 (ordinary RLS) keeps weighing the
+    stale regime, landing between the two laws."""
+    rng = np.random.default_rng(3)
+    m = OnlineLinearRegression(1, lam=1.0)
+    for _ in range(300):
+        x = rng.uniform(0.5, 2.0, size=1)
+        m.update(x, 0.1 * float(x[0]))
+    for _ in range(300):
+        x = rng.uniform(0.5, 2.0, size=1)
+        m.update(x, 0.4 * float(x[0]))
+    mid = m.predict([1.0])
+    assert 0.15 < mid < 0.35
+
+
+# ----------------------------------------------------------- non-negative
+def test_predictions_never_negative():
+    """Latency predictions clamp at zero even when the fitted plane dips
+    below it (e.g. decreasing trend extrapolated past the data)."""
+    m = OnlineLinearRegression(1)
+    for x, y in [([0.0], 1.0), ([1.0], 0.5), ([2.0], 0.05)] * 20:
+        m.update(x, y)
+    assert m.predict([10.0]) == 0.0
+    rng = np.random.default_rng(4)
+    sm = SlackModel()
+    for _ in range(64):
+        sm.observe("G", _feats(rng), float(rng.uniform(0.001, 0.2)))
+    for _ in range(64):
+        f = _feats(rng)
+        f["tokens_in"] = float(rng.uniform(-5000, 50000))
+        assert sm.predict_stage("G", f) >= 0.0
+        assert sm.predict_remaining(["G", "G", "unknown"], f) >= 0.0
+
+
+# --------------------------------------------------------- fallback warmup
+def test_fallback_mean_before_warmup():
+    """Below 8 observations the model must serve the EMA fallback mean, not
+    the barely-initialized regression; at 8 it switches over."""
+    rng = np.random.default_rng(5)
+    sm = SlackModel()
+    assert sm.predict_stage("G", _feats(rng)) == 0.02  # cold default
+
+    lat = [0.10, 0.20, 0.10, 0.20, 0.10, 0.20, 0.10]
+    ema = lat[0]
+    for y in lat:  # 7 observations: still fallback territory
+        sm.observe("G", _feats(rng), y)
+        ema = 0.95 * ema + 0.05 * y
+    assert sm.models["G"].n_obs == 7
+    f = _feats(rng)
+    assert sm.predict_stage("G", f) == pytest.approx(ema)
+    # the fallback ignores features entirely
+    f2 = dict(f, tokens_in=f["tokens_in"] * 100)
+    assert sm.predict_stage("G", f2) == sm.predict_stage("G", f)
+
+    sm.observe("G", _feats(rng), 0.15)  # 8th observation: model takes over
+    assert sm.models["G"].n_obs == 8
+    assert sm.predict_stage("G", f) != pytest.approx(ema)
+
+
+def test_unknown_component_uses_default():
+    sm = SlackModel()
+    assert sm.predict_stage("never_seen", {}) == 0.02
+    assert sm.slack(1.0, 3.0, ["never_seen"], {}) == pytest.approx(2.0 - 0.02)
+
+
+def test_feature_vector_scaling_and_order():
+    sm = SlackModel()
+    v = sm._vec({"tokens_in": 1000.0, "tokens_out": 500.0, "k_docs": 2.0,
+                 "docs_tokens": 250.0, "iteration": 1.0})
+    assert v == [1.0, 0.5, 0.002, 0.25, 0.001]
+    assert len(FEATURES) == len(v)
