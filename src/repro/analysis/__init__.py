@@ -1,0 +1,38 @@
+"""repro.analysis: static-analysis and sanitizer tooling for the serving
+engine.
+
+Three parts, one CLI (``python -m repro.analysis``), one CI job:
+
+* ``jaxpr_audit`` — declarative ``StepContract``s checked against the traced
+  jaxprs AND compiled HLO of the engine's step programs: collective census
+  per mesh axis, int8 dtype-flow (dequant must happen in-kernel), host
+  callback detection, and a compile-cache sentinel against
+  ``warmup_step_variants()`` shape buckets.
+* ``lint`` — AST lint with repo-specific rules (host/device layering, the
+  block-table ``pad=-1`` contract, scheduling determinism, PRNG-split
+  discipline).
+* ``kvsan`` — a shadow-state sanitizer for the three-tier KV block
+  lifecycle, enabled via ``PagedKVCache(sanitize=True)`` /
+  ``GenerationEngine(sanitize=True)``.
+
+Every rule is mutation-tested: ``python -m repro.analysis <cmd> --mutate
+<id>`` seeds one deliberate violation and must exit nonzero
+(tests/test_analysis.py asserts each one); the clean tree exits zero.
+See docs/analysis.md.
+"""
+from repro.analysis.jaxpr_audit import (
+    AuditReport, Finding, StepContract, audit_engine,
+)
+from repro.analysis.kvsan import KVSanError, KVSanitizer
+from repro.analysis.lint import LintViolation, run_lint
+
+__all__ = [
+    "AuditReport",
+    "Finding",
+    "KVSanError",
+    "KVSanitizer",
+    "LintViolation",
+    "StepContract",
+    "audit_engine",
+    "run_lint",
+]

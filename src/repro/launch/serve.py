@@ -37,7 +37,8 @@ def serve_sim(app_name: str, rate: float, duration: float, engine: str = "patchw
 def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
                tp: int = 1, dp: int = 1, preempt: str = "recompute",
                host_blocks: int = 0, pipeline: bool = True,
-               kernel: str = "reference", kv_dtype: str = None):
+               kernel: str = "reference", kv_dtype: str = None,
+               audit: bool = False):
     """Serve a real reduced model with batched requests on this host.
 
     ``tp > 1`` shards the paged engine over a ("model",) mesh — TP-resident
@@ -81,6 +82,17 @@ def serve_real(arch: str, n_requests: int = 8, max_new: int = 12,
     else:
         eng = GenerationEngine(cfg, max_batch=4, max_seq=256, pool_layout=layout,
                                **tier)
+    if audit:
+        # contract audit before any traffic: collective census, callback
+        # scan, int8 dtype flow, compile-cache sentinel (repro.analysis)
+        from repro.analysis.jaxpr_audit import audit_engine
+
+        target = eng.engines[0] if dp > 1 else eng
+        report = audit_engine(target)
+        for line in report.render().splitlines():
+            print(f"[serve:audit] {line}")
+        if not report.ok:
+            raise SystemExit("[serve:audit] step-program contract violated")
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(rng.integers(0, cfg.vocab_size, rng.integers(4, 32)), max_new)
@@ -201,6 +213,11 @@ def main(argv=None):
                     help="pace --pipelines arrivals in real time instead of "
                          "the deterministic virtual clock")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--audit", action="store_true",
+                    help="with --real: run the repro.analysis step-program "
+                         "contract audit (collectives, callbacks, int8 "
+                         "flow, cache sentinel) at startup and abort on "
+                         "any violation")
     args = ap.parse_args(argv)
     if args.pipelines:
         serve_pipelines(args.arch, args.rate, args.duration,
@@ -210,7 +227,8 @@ def main(argv=None):
     elif args.real:
         serve_real(args.arch, tp=args.tp, dp=args.dp, preempt=args.preempt,
                    host_blocks=args.host_blocks, pipeline=not args.no_pipeline,
-                   kernel=args.kernel, kv_dtype=args.kv_dtype)
+                   kernel=args.kernel, kv_dtype=args.kv_dtype,
+                   audit=args.audit)
     else:
         serve_sim(args.app, args.rate, args.duration, args.engine, args.slo)
 

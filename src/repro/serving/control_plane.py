@@ -99,12 +99,18 @@ class CopyEngine:
         self.submitted = 0
         self.drained = 0
         self.forced = 0   # ops drained early by the bound, not by schedule
+        # optional analysis.kvsan.KVSanitizer: tracks per-tag pending copies
+        # so the shadow can enforce the sync(tag) happens-before edge (a
+        # swap-set restore must not read ahead of its deferred fill)
+        self.sanitizer: Optional[Any] = None
 
     @property
     def backlog(self) -> int:
         return len(self._q)
 
     def submit(self, op: Callable[[], None], tag: Any = None) -> None:
+        if self.sanitizer is not None:
+            self.sanitizer.copy_submit(tag)
         self._q.append((tag, op))
         self.submitted += 1
         while len(self._q) > self.max_pending:
@@ -112,8 +118,10 @@ class CopyEngine:
             self._run_one()
 
     def _run_one(self) -> None:
-        _tag, op = self._q.popleft()
+        tag, op = self._q.popleft()
         self.drained += 1
+        if self.sanitizer is not None:
+            self.sanitizer.copy_drained(tag)
         op()
 
     def drain(self, budget: Optional[int] = None) -> int:
@@ -345,6 +353,8 @@ class ControlPlane:
         decode_idx = np.full((B,), -1, np.int32)
         last_idx = np.zeros((B,), np.int32)
         tables = np.full((B, eng._view_blocks), -1, np.int32)
+        # pad-ok: ragged tables ship to the device RAW; the fused ragged
+        # kernel (and its reference path) masks blk < 0 per-step itself.
         rows = eng.kv.pool.table_array([r.req_id for r in active],
                                        eng._view_blocks)
         cursor = 0

@@ -80,7 +80,7 @@ from __future__ import annotations
 import copy
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -272,6 +272,7 @@ class GenerationEngine:
         ragged: bool = True,
         pack_align: int = 4,
         kv_dtype: Optional[str] = None,
+        sanitize: bool = False,
     ):
         """``mesh`` / ``pool_layout`` shard the paged backend over a device
         mesh: params become TP-resident (Megatron layout, embed/lm_head
@@ -324,7 +325,15 @@ class GenerationEngine:
         (the kernels dequantize in VMEM after the block DMA). Defaults to
         ``"int8"`` when ``cfg.kv_cache_quant`` is set, so quant configs that
         historically fell back to the dense engine now serve paged.
-        Single-device only for now (the scale pools don't shard)."""
+        Single-device only for now (the scale pools don't shard).
+
+        ``sanitize=True`` attaches an ``analysis.kvsan.KVSanitizer`` shadow
+        state machine to the pool allocator, the host tier and the copy
+        engine: every block lifecycle transition is validated as it happens
+        and violations (use-after-free, double-free, refcount underflow,
+        fill-before-reserve, swap-ordering) raise ``KVSanError`` with
+        operation backtraces. Debug mode — a few dict ops plus a captured
+        call site per pool operation."""
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
@@ -443,8 +452,13 @@ class GenerationEngine:
                     cfg, n_blocks, block_size, self.max_blocks,
                     prefix_sharing=prefix_sharing, layout=pool_layout,
                     host_store=self.host_store, kv_dtype=kv_dtype,
+                    sanitize=sanitize,
                 )
             self.kv_dtype = kv_dtype
+            # sanitizer (if any) also shadows the copy engine's tag queue so
+            # the swap-in sync(tag) happens-before edge is enforced
+            self.sanitizer = getattr(self.kv, "sanitizer", None)
+            self._copy.sanitizer = self.sanitizer
             # paged-path model calls never use the dense per-slot quant
             # branch: when the pool is quantized the gathered views are
             # already dequantized floats (and the _q writes requantize), so
@@ -486,6 +500,7 @@ class GenerationEngine:
         else:
             self.pool_layout = None
             self.kv_dtype = None
+            self.sanitizer = None
             self.cache = init_cache(cfg, max_batch, max_seq)
             self._decode_jit = jax.jit(self._decode_fn)
             self._prefill_jit: Dict[int, Any] = {}
@@ -616,50 +631,57 @@ class GenerationEngine:
             n += 1
         return n
 
-    def audit_collectives(self, which: str = "fused") -> Dict[str, int]:
-        """Compile one of the engine's step programs against representative
-        inputs and census its collective ops (models.shardmap_tp
-        .count_collectives) — the schedule audit behind the sharded-pool
-        contract: ``"fused"`` (the interleaved mixed batch) and ``"decode"``
-        (block-table batched decode) must show ZERO all-gathers — the
-        gather/scatter over host-resident block tables never communicates —
-        and only the Megatron all-reduces; ``"pool"`` (a bare
-        gather_paged_batch + write_paged_chunk_batch roundtrip, the decode
-        chunk-scatter path in isolation) must be collective-free entirely."""
-        from repro.models.shardmap_tp import count_collectives
+    def step_program(self, which: str) -> Tuple[Any, tuple]:
+        """Return ``(jitted, example_args)`` for one of the engine's device
+        step programs, the single entry point behind every static audit
+        (collective census, jaxpr contract audit, cache sentinel):
 
+        * ``"fused_ragged"`` — the packed mixed-batch step (production path
+          when ``ragged=True``), against a representative packed buffer.
+        * ``"fused_padded"`` — the padded-slab fused step (the ragged
+          path's shape-stable fallback and oracle).
+        * ``"decode"`` — the live decode dispatch: the Pallas paged-decode
+          program when ``kernel="pallas"``, else the gather oracle.
+        * ``"decode_ref"`` — always the gather-oracle decode jit (stays
+          live for parity runs even under the Pallas kernel).
+        * ``"pool"`` — a bare gather_paged_batch + write_paged_chunk_batch
+          roundtrip (the decode chunk-scatter path in isolation), freshly
+          jitted with the engine's pool shardings when on a mesh.
+
+        Example args are shaped like real dispatches (pad-only tables, zero
+        tokens) so lowering/tracing them exercises the production shapes
+        without touching engine state."""
         B, C = self.max_batch, self.prefill_chunk_size
         k, v = self.kv.k, self.kv.v
         tokens = jnp.zeros((B, C), jnp.int32)
         starts = jnp.zeros((B,), jnp.int32)
         n_valid = jnp.ones((B,), jnp.int32)
         seg = jnp.zeros((B, C), jnp.int32)
-        if which == "fused":
-            if self.ragged:
-                # the production mixed-batch program is the ragged step now;
-                # audit it against a representative packed buffer
-                T = -(-(B * C) // self.pack_align) * self.pack_align
-                flat = jnp.zeros((T,), jnp.int32)
-                tables = jnp.full((B, self._view_blocks), -1, jnp.int32)
-                lowered = self._ragged_step_jit.lower(
-                    self.params, k, v, self.kv.k_scale, self.kv.v_scale,
-                    tables, flat, flat, flat, flat, flat,
-                    flat, jnp.zeros((B,), jnp.int32)
-                )
-            else:
-                tables = jnp.full((B, self._view_blocks), self._null_block,
-                                  jnp.int32)
-                lowered = self._fused_step_jit.lower(
-                    self.params, k, v, self.kv.k_scale, self.kv.v_scale,
-                    tables, tokens, starts, n_valid, seg, seg, seg
-                )
-        elif which == "decode":
-            tables = jnp.full((B, self.max_blocks), self._null_block, jnp.int32)
-            lowered = self._decode_paged_jit.lower(
+        if which == "fused_ragged":
+            T = -(-(B * C) // self.pack_align) * self.pack_align
+            flat = jnp.zeros((T,), jnp.int32)
+            tables = jnp.full((B, self._view_blocks), -1, jnp.int32)
+            return self._ragged_step_jit, (
                 self.params, k, v, self.kv.k_scale, self.kv.v_scale,
-                tables, tokens[:, :1], starts
+                tables, flat, flat, flat, flat, flat,
+                flat, jnp.zeros((B,), jnp.int32),
             )
-        elif which == "pool":
+        if which == "fused_padded":
+            tables = jnp.full((B, self._view_blocks), self._null_block,
+                              jnp.int32)
+            return self._fused_step_jit, (
+                self.params, k, v, self.kv.k_scale, self.kv.v_scale,
+                tables, tokens, starts, n_valid, seg, seg, seg,
+            )
+        if which in ("decode", "decode_ref"):
+            tables = jnp.full((B, self.max_blocks), self._null_block, jnp.int32)
+            jitted = (self._decode_dispatch_jit if which == "decode"
+                      else self._decode_paged_jit)
+            return jitted, (
+                self.params, k, v, self.kv.k_scale, self.kv.v_scale,
+                tables, tokens[:, :1], starts,
+            )
+        if which == "pool":
             bs = self.block_size
 
             def roundtrip(k_pool, tables, starts, new_kv, n_valid):
@@ -679,10 +701,29 @@ class GenerationEngine:
                 fn = jax.jit(roundtrip, out_shardings=(pool_s, entry_s))
             else:
                 fn = jax.jit(roundtrip)
-            lowered = fn.lower(k, tables, starts, new_kv, n_valid)
-        else:
-            raise ValueError(f"unknown audit target {which!r}")
-        return count_collectives(lowered.compile())
+            return fn, (k, tables, starts, new_kv, n_valid)
+        raise ValueError(f"unknown step program {which!r}")
+
+    def audit_collectives(self, which: str = "fused") -> Dict[str, int]:
+        """Compile one of the engine's step programs against representative
+        inputs and census its collective ops (models.shardmap_tp
+        .count_collectives) — the schedule audit behind the sharded-pool
+        contract: ``"fused"`` (the interleaved mixed batch) and ``"decode"``
+        (block-table batched decode) must show ZERO all-gathers — the
+        gather/scatter over host-resident block tables never communicates —
+        and only the Megatron all-reduces; ``"pool"`` (a bare
+        gather_paged_batch + write_paged_chunk_batch roundtrip, the decode
+        chunk-scatter path in isolation) must be collective-free entirely.
+
+        Richer checks (per-axis jaxpr census, int8 dtype flow, callback
+        scan, cache sentinel) live in repro.analysis.jaxpr_audit, built on
+        the same step_program() targets."""
+        from repro.models.shardmap_tp import count_collectives
+
+        alias = {"fused": "fused_ragged" if self.ragged else "fused_padded",
+                 "decode": "decode_ref"}
+        jitted, args = self.step_program(alias.get(which, which))
+        return count_collectives(jitted.lower(*args).compile())
 
     # token-weighted windows below this many prompt tokens are "cold": right
     # after engine start a single finished request would swing the measured
@@ -1190,6 +1231,8 @@ class GenerationEngine:
         req.truncated = cap < len(req.prompt)
         toks = np.asarray(req.prompt[:cap], np.int32)
         pc = self.prefill_chunk_size
+        # pad-ok: prefill gathers only blocks already reserved for this
+        # request; gather_paged_batch clamps pads inside the jitted fn.
         table = jnp.asarray(
             self.kv.pool.table_array([req.req_id], self._view_blocks)[0]
         )
@@ -1600,7 +1643,8 @@ class DataParallelEngineGroup:
                  prefix_sharing: bool = True, pool_layout: Optional[ShardedPoolLayout] = None,
                  seed: int = 0, host_store: Optional[HostBlockStore] = None,
                  host_blocks: Optional[int] = None,
-                 kv_dtype: Optional[str] = None, **engine_kwargs):
+                 kv_dtype: Optional[str] = None, sanitize: bool = False,
+                 **engine_kwargs):
         if dp < 1:
             raise ValueError("dp must be >= 1")
         max_blocks = -(-max_seq // block_size)
@@ -1624,12 +1668,21 @@ class DataParallelEngineGroup:
         self.engines: List[GenerationEngine] = []
         arrays: Optional[PoolArrays] = None
         params = None
+        # one sanitizer spans the whole group: replicas allocate from
+        # disjoint ranges of one shared pool array, so a shared shadow also
+        # catches cross-replica double-ownership of a block
+        self.sanitizer = None
+        if sanitize:
+            from repro.analysis.kvsan import KVSanitizer
+
+            self.sanitizer = KVSanitizer()
         for rank in range(dp):
             lo, hi = block_range(total, dp, rank)
             kv = PagedKVCache(
                 cfg, total, block_size, max_blocks, prefix_sharing=prefix_sharing,
                 layout=pool_layout, block_range=(lo, hi), arrays=arrays,
                 host_store=host_store, client_tag=rank, kv_dtype=kv_dtype,
+                sanitizer=self.sanitizer,
                 # write-through: siblings should host-hit a doc without
                 # waiting for the producing replica to evict it from HBM
                 host_write_through=host_store is not None,

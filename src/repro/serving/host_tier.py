@@ -76,6 +76,10 @@ class HostBlockStore:
         else:
             self.k_scale = self.v_scale = None
         self.free: List[int] = list(range(n_blocks))
+        # optional analysis.kvsan.KVSanitizer shadow (attached by a sanitized
+        # PagedKVCache, or directly): mirrors slot transitions and raises on
+        # fill-before-reserve / cross-tier aliasing / swap-order violations
+        self.sanitizer: Optional[Any] = None
         self._by_key: Dict[bytes, int] = {}     # prefix key -> slot
         self._key_of: Dict[int, bytes] = {}     # reverse map
         self._lru: Dict[bytes, None] = {}       # keyed slots, eviction order
@@ -128,6 +132,8 @@ class HostBlockStore:
         del self._key_of[slot]
         self._producer.pop(key, None)
         self.evictions += 1
+        if self.sanitizer is not None:
+            self.sanitizer.host_evict(key, slot)
         return slot
 
     def _take_slot(self) -> Optional[int]:
@@ -178,6 +184,9 @@ class HostBlockStore:
         self._lru[key] = None
         self._producer[key] = owner
         self.puts += 1
+        if self.sanitizer is not None:
+            self.sanitizer.host_put(key, slot, owner)
+            self.sanitizer.audit_host(self)
         return True
 
     def read(self, keys: Sequence[bytes], owner: Any = None):
@@ -188,6 +197,8 @@ class HostBlockStore:
         stores return ``(k, v, k_scale, v_scale)`` with ``(G, len(keys),
         KVH)`` scale stacks."""
         slots = [self._by_key[k] for k in keys]
+        if self.sanitizer is not None:
+            self.sanitizer.host_read(keys, slots)
         for key in keys:
             self._touch(key)
             self.hits += 1
@@ -218,6 +229,9 @@ class HostBlockStore:
             slots.append(s)
         self._swap[tag] = slots
         self.swap_outs += 1
+        if self.sanitizer is not None:
+            self.sanitizer.host_reserve(tag, slots)
+            self.sanitizer.audit_host(self)
         return slots
 
     def fill_seq(self, tag: Any, k_blocks: np.ndarray, v_blocks: np.ndarray,
@@ -225,6 +239,8 @@ class HostBlockStore:
                  v_scales: Optional[np.ndarray] = None) -> None:
         """Fill a reserved swap set's contents (async copy-engine path).
         Tolerant of a tag that was dropped before the copy drained."""
+        if self.sanitizer is not None:
+            self.sanitizer.host_fill(tag)
         slots = self._swap.get(tag)
         if slots is None:
             return
@@ -256,6 +272,8 @@ class HostBlockStore:
     def restore_seq(self, tag: Any):
         """Unpin and return a swap set's ``(k, v)`` block chain copies
         (``(k, v, k_scale, v_scale)`` for a quantized store)."""
+        if self.sanitizer is not None:
+            self.sanitizer.host_restore(tag)
         slots = self._swap.pop(tag)
         k, v = self.k[:, slots].copy(), self.v[:, slots].copy()
         out = (k, v)
@@ -269,6 +287,8 @@ class HostBlockStore:
     def drop_seq(self, tag: Any) -> None:
         """Abandon a swap set without restoring (victim fell back to
         recompute or was cancelled)."""
+        if self.sanitizer is not None and tag in self._swap:
+            self.sanitizer.host_drop(tag)
         self.free.extend(self._swap.pop(tag, []))
 
     # ---------------------------------------------------------------- stats

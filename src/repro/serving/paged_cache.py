@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +76,10 @@ class PagedPool:
     on_free: Optional[Callable[[int], None]] = None             # block truly freed
     keep_on_release: Optional[Callable[[int], bool]] = None     # warm-cache policy
     n_owned: int = 0     # blocks this allocator may hand out (DP block range)
+    # optional analysis.kvsan.KVSanitizer: every state transition below
+    # mirrors into its shadow machine, which raises on lifecycle violations
+    # (use-after-free, double-free, refcount underflow). None = no overhead.
+    sanitizer: Optional[Any] = None
 
     def __post_init__(self):
         if not self.free_list:
@@ -102,6 +106,8 @@ class PagedPool:
             raise MemoryError("paged pool exhausted: no free or warm block")
         b = next(iter(self.cached))  # evict least-recently-used warm block
         del self.cached[b]
+        if self.sanitizer is not None:
+            self.sanitizer.device_warm_evict(b)
         if self.on_free is not None:
             self.on_free(b)
         return b
@@ -112,6 +118,8 @@ class PagedPool:
         yet (backpressure) — a hot shared prefix must outlive cold one-off
         blocks released after it. O(1)."""
         if self.refcounts.get(block_id, 0) == 0 and block_id in self.cached:
+            if self.sanitizer is not None:
+                self.sanitizer.device_touch(block_id)
             del self.cached[block_id]
             self.cached[block_id] = None  # re-insert at the MRU end
 
@@ -124,6 +132,8 @@ class PagedPool:
         blocks = [self._pop_block() for _ in range(need)]
         for b in blocks:
             self.refcounts[b] = 1
+            if self.sanitizer is not None:
+                self.sanitizer.device_alloc(b, seq_id)
         self.tables.setdefault(seq_id, []).extend(blocks)
         return blocks
 
@@ -132,6 +142,8 @@ class PagedPool:
         refcount (copy-on-nothing prefix sharing: only fully written, immutable
         prompt blocks are ever shared). Reviving a warm cached block removes it
         from the eviction queue (O(1))."""
+        if self.sanitizer is not None:
+            self.sanitizer.device_share(block_id, seq_id)
         if self.refcounts.get(block_id, 0) == 0:
             self.cached.pop(block_id, None)
         self.refcounts[block_id] = self.refcounts.get(block_id, 0) + 1
@@ -151,13 +163,19 @@ class PagedPool:
         # to be re-hit — every prefix match starts there) land at the back of
         # the LRU queue, so tails are evicted before heads
         for b in reversed(self.tables.pop(seq_id, [])):
+            if self.sanitizer is not None:
+                self.sanitizer.device_release(b, seq_id)
             self.refcounts[b] = self.refcounts.get(b, 1) - 1
             if self.refcounts[b] <= 0:
                 del self.refcounts[b]
                 if self.keep_on_release is not None and self.keep_on_release(b):
                     self.cached[b] = None  # stays warm for prefix reuse
+                    if self.sanitizer is not None:
+                        self.sanitizer.device_warm(b)
                 else:
                     self.free_list.append(b)
+                    if self.sanitizer is not None:
+                        self.sanitizer.device_free(b)
                     if self.on_free is not None:
                         self.on_free(b)
 
@@ -538,7 +556,8 @@ class PagedKVCache:
                  layout=None, block_range: Optional[Tuple[int, int]] = None,
                  arrays: Optional[PoolArrays] = None, host_store=None,
                  host_write_through: bool = False, client_tag=None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None, sanitize: bool = False,
+                 sanitizer=None):
         """``host_store`` (serving.host_tier.HostBlockStore) attaches the
         host-memory tier: warm blocks evicted from HBM demote their contents
         there, and ``admit_tokens`` promotes host-resident keys back as a
@@ -552,7 +571,14 @@ class PagedKVCache:
         KV-head) float32 scale pools alongside (``k_scale``/``v_scale``);
         ``None`` (default) stores ``cfg.dtype`` floats. Prefix keys stay
         token-content hashes either way, so sharing and the segment index are
-        dtype-oblivious."""
+        dtype-oblivious.
+
+        ``sanitize=True`` attaches an ``analysis.kvsan.KVSanitizer`` that
+        mirrors every block lifecycle transition (pool, host tier, copy
+        engine) in a shadow state machine and raises ``KVSanError`` on
+        use-after-free / double-free / refcount underflow / swap-ordering
+        violations — a debug mode. ``sanitizer`` injects a shared instance
+        (DP groups: one sanitizer spans all replicas of a shared pool)."""
         from repro.models import transformer as tfm
 
         self.cfg = cfg
@@ -568,12 +594,21 @@ class PagedKVCache:
         lo, hi = block_range if block_range is not None else (0, n_blocks)
         if not (0 <= lo < hi <= n_blocks):
             raise ValueError(f"block_range {(lo, hi)} outside [0, {n_blocks})")
+        if sanitizer is None and sanitize:
+            from repro.analysis.kvsan import KVSanitizer
+
+            sanitizer = KVSanitizer()
+        self.sanitizer = sanitizer
         self.pool = PagedPool(
             n_blocks, block_size,
             free_list=list(range(lo, hi)),
             on_free=self._forget_block,
             keep_on_release=lambda b: b in self._block_key,
+            sanitizer=sanitizer,
         )
+        if sanitizer is not None and host_store is not None \
+                and getattr(host_store, "sanitizer", None) is None:
+            host_store.sanitizer = sanitizer
         if arrays is None:
             k = jnp.zeros(
                 (G, n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim), dtype
@@ -770,6 +805,8 @@ class PagedKVCache:
             if key not in self._prefix_index:  # first writer wins, as ever
                 self._prefix_index[key] = b
                 self._block_key[b] = key
+                if self.sanitizer is not None:
+                    self.sanitizer.device_key(b, key)
 
     def admit_tokens(self, seq_id: int, tokens, layout=None) -> Optional[Admission]:
         """Admission-controlled allocation for a prompt. Reuses every cached
@@ -907,6 +944,8 @@ class PagedKVCache:
             if key not in self._prefix_index:
                 self._prefix_index[key] = table[i]
                 self._block_key[table[i]] = key
+                if self.sanitizer is not None:
+                    self.sanitizer.device_key(table[i], key)
                 published.append((table[i], key))
         if published and self.host_store is not None and self.host_write_through:
             if self.copy_engine is not None:
@@ -998,6 +1037,8 @@ class PagedKVCache:
         new_blk = self.pool.extend_for(seq_id, pos + 1)
         if new_blk is not None:
             self.reset_block_scales([new_blk])
+        # pad-ok: writes touch only positions < lengths[seq], which sit in
+        # blocks extend_for just reserved — the row is fully backed there.
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
         if self.quantized:
             self.k, self.k_scale = write_paged_chunk_q(
@@ -1013,6 +1054,8 @@ class PagedKVCache:
         """k/v_seq: (G, Lp, KVH, hd) — bulk vectorized copy of a prefilled
         prompt (single scatter; no host loop)."""
         Lp = k_seq.shape[1]
+        # pad-ok: the Lp tokens being written were block-reserved by the
+        # caller's allocate(); pads beyond ceil(Lp/bs) are never addressed.
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
         if self.quantized:
             self.k, self.k_scale = write_paged_chunk_q(
@@ -1027,6 +1070,8 @@ class PagedKVCache:
     def sequence_view(self, seq_id: int) -> Tuple:
         """Returns (k, v, valid): contiguous gathered view + validity mask
         (dequantized to float32 for quantized pools)."""
+        # pad-ok: gather_paged_dq clamps pad rows and paged_validity masks
+        # them out of the returned view, so -1 entries read as invalid.
         row = jnp.asarray(self.pool.table_array([seq_id], self.max_blocks)[0])
         k = gather_paged_dq(self.k, self.k_scale, row, self.max_blocks)
         v = gather_paged_dq(self.v, self.v_scale, row, self.max_blocks)

@@ -1,0 +1,299 @@
+"""repro.analysis mutation matrix: every rule must detect its seeded defect.
+
+The static-analysis suite is only trustworthy if each rule demonstrably
+fires: for every registered mutation id (``python -m repro.analysis
+--list-mutations``) the CLI must exit NONZERO with the defect seeded, and
+ZERO on the clean tree. Lint rules are additionally pinned to their rule
+codes, the kv sanitizer to its violation codes, and the jaxpr auditor's
+int8 dtype-flow walk to both directions (whole-pool upcast flagged,
+gathered-slice requant not flagged)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis.__main__ import _KVSAN_MUTANTS, _lint_mutants, all_mutations, main
+from repro.analysis.kvsan import KVSanError, KVSanitizer
+from repro.analysis.lint import lint_source, run_lint
+
+# ------------------------------------------------------------------- lint
+
+
+def test_lint_clean_tree():
+    assert run_lint() == []
+
+
+def test_cli_clean_lint_exits_zero():
+    assert main(["lint"]) == 0
+
+
+@pytest.mark.parametrize("mid,rule", [
+    ("lint-layering", "R001"),
+    ("lint-pad", "R002"),
+    ("lint-determinism", "R003"),
+    ("lint-prng", "R004"),
+])
+def test_lint_mutations_fire_their_rule(mid, rule):
+    sources = _lint_mutants()[mid]
+    violations = run_lint(sources=sources)
+    assert violations, mid
+    assert {v.rule for v in violations} == {rule}, violations
+    assert main(["lint", "--mutate", mid]) == 1
+
+
+def test_lint_line_pragma_suppresses():
+    src = ("import time\n\n"
+           "def build_plan(state):\n"
+           "    return time.time()  # lint: disable=R003\n")
+    assert lint_source("serving/control_plane.py", src) == []
+    # without the pragma the same source fires
+    assert lint_source("serving/control_plane.py", src.replace(
+        "  # lint: disable=R003", ""))
+
+
+def test_lint_pad_pragma_and_guard_paths():
+    body = ("def consume(pool, ids, width):\n"
+            "    rows = pool.table_array(ids, width)\n"
+            "    return rows\n")
+    assert lint_source("serving/x.py", body)  # unguarded: fires
+    guarded = body.replace("return rows", "return rows[rows >= 0]")
+    assert lint_source("serving/x.py", guarded) == []
+    pragma = body.replace(
+        "    rows =", "    # pad-ok: rows fully backed here\n    rows =")
+    assert lint_source("serving/x.py", pragma) == []
+
+
+def test_lint_function_level_jax_import_allowed_in_core():
+    # mirrors core/profiling.py: lazy jax import inside a helper is legal
+    src = "def calibrate():\n    import jax.numpy as jnp\n    return jnp\n"
+    assert lint_source("core/profiling.py", src) == []
+    # ...but a module-level one is not
+    assert lint_source("core/profiling.py", "import jax.numpy as jnp\n")
+
+
+# ------------------------------------------------------------------ kvsan
+
+_KV_CODES = {
+    "kvsan-use-after-free": "use-after-free",
+    "kvsan-double-free": "double-free",
+    "kvsan-refcount-underflow": "refcount-underflow",
+    "kvsan-fill-before-reserve": "fill-before-reserve",
+    "kvsan-cross-tier-aliasing": "cross-tier-aliasing",
+    "kvsan-swap-order": "swap-order",
+}
+
+
+def test_cli_clean_kvsan_exits_zero():
+    assert main(["kvsan"]) == 0
+
+
+@pytest.mark.parametrize("mid", sorted(_KVSAN_MUTANTS))
+def test_kvsan_mutations_raise_their_code(mid):
+    san = KVSanitizer()
+    with pytest.raises(KVSanError) as ei:
+        _KVSAN_MUTANTS[mid](san)
+    assert ei.value.code == _KV_CODES[mid]
+    # the error carries an operation backtrace for the offending entity
+    assert "recent operations" in str(ei.value)
+    assert main(["kvsan", "--mutate", mid]) == 1
+
+
+def test_kvsan_catches_free_masked_by_default_refcount():
+    """PagedPool.free defaults missing refcounts to 1
+    (``refcounts.get(b, 1) - 1``), which silently absorbs a double-free at
+    the pool level — the shadow state machine must still catch it."""
+    from repro.serving.paged_cache import PagedPool
+
+    san = KVSanitizer()
+    pool = PagedPool(n_blocks=4, block_size=4, sanitizer=san)
+    blocks = pool.allocate(1, 4)
+    pool.free(1)
+    assert blocks[0] not in pool.refcounts  # pool forgot the block entirely
+    pool.tables[1] = [blocks[0]]
+    with pytest.raises(KVSanError) as ei:
+        pool.free(1)  # without the sanitizer this would "succeed"
+    assert ei.value.code == "double-free"
+
+
+def test_kvsan_fill_after_drop_is_legal():
+    """host_tier.fill_seq documents tolerance of a tag dropped before the
+    deferred copy drained — the sanitizer must not flag that path."""
+    from repro.serving.host_tier import HostBlockStore
+
+    san = KVSanitizer()
+    store = HostBlockStore((1, 4, 1, 2), np.float32, n_blocks=4)
+    store.sanitizer = san
+    tag = ("e", 1)
+    store.reserve_seq(tag, 1)
+    store.drop_seq(tag)
+    store.fill_seq(tag, np.zeros((1, 1, 4, 1, 2), np.float32),
+                   np.zeros((1, 1, 4, 1, 2), np.float32))  # no raise
+    assert san.violations == 0
+
+
+# ------------------------------------------------------------------ jaxpr
+
+
+@pytest.fixture(scope="module")
+def smoke_engine():
+    from repro.configs import get_arch, smoke_variant
+    from repro.serving.engine import GenerationEngine
+
+    return GenerationEngine(smoke_variant(get_arch("smollm-135m")),
+                            max_batch=2, max_seq=64, prefill_chunk_size=16,
+                            token_budget=20)
+
+
+def test_jaxpr_clean_audit_holds(smoke_engine):
+    from repro.analysis.jaxpr_audit import audit_engine
+
+    report = audit_engine(smoke_engine)
+    assert report.ok, report.render()
+    checks = {(f.program, f.check) for f in report.findings}
+    # every default contract produced its findings
+    for prog in ("fused_ragged", "decode", "decode_ref", "pool"):
+        assert (prog, "collectives") in checks
+        assert (prog, "callbacks") in checks
+    assert ("fused_ragged", "cache-sentinel") in checks
+
+
+def test_jaxpr_cache_sentinel_detects_off_bucket(smoke_engine):
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import cache_sentinel
+
+    eng = smoke_engine
+    buckets = eng.warmup_step_variants()
+    assert cache_sentinel(eng).ok
+    jitted, a = eng.step_program("fused_ragged")
+    T = a[6].shape[0] + eng.pack_align   # one step past the warmed cap
+    flat = jnp.zeros((T,), jnp.int32)
+    jitted(*a[:6], flat, flat, flat, flat, flat, flat, a[12])
+    finding = cache_sentinel(eng)
+    assert not finding.ok
+    assert f"{buckets + 1} cached" in finding.detail
+
+
+def test_jaxpr_collective_and_callback_mutations(smoke_engine):
+    from repro.analysis.__main__ import _JAXPR_ENGINE_MUTANTS
+    from repro.analysis.jaxpr_audit import audit_program, default_contracts
+
+    pool_contract = [c for c in default_contracts(smoke_engine)
+                     if c.program == "pool"]
+    for mid, seed in _JAXPR_ENGINE_MUTANTS.items():
+        orig = smoke_engine.step_program
+        try:
+            seed(smoke_engine)
+            findings = [f for c in pool_contract
+                        for f in audit_program(smoke_engine, c)]
+            bad = [f for f in findings if not f.ok]
+            assert bad, mid
+            expect = "collectives" if mid == "jaxpr-collective" else "callbacks"
+            assert any(f.check == expect for f in bad), (mid, findings)
+        finally:
+            smoke_engine.step_program = orig
+
+
+def test_jaxpr_int8_contract_and_oracle_mutation():
+    from repro.analysis.jaxpr_audit import (
+        StepContract, audit_engine, audit_program,
+    )
+    from repro.configs import get_arch, smoke_variant
+    from repro.serving.engine import GenerationEngine
+
+    eng = GenerationEngine(smoke_variant(get_arch("smollm-135m")),
+                           max_batch=2, max_seq=64, prefill_chunk_size=16,
+                           token_budget=20, kv_dtype="int8", kernel="pallas")
+    report = audit_engine(eng)
+    assert report.ok, report.render()
+    flows = [f for f in report.findings if f.check == "int8-flow"]
+    assert {f.program for f in flows} == {"fused_ragged", "decode"}
+    # seeded mutation: the gather-oracle decode dequantizes in XLA, so
+    # holding it to the in-kernel contract must fail
+    bad = audit_program(eng, StepContract(
+        "decode_ref", max_all_reduce=0, require_int8_kernel_path=True))
+    flow = [f for f in bad if f.check == "int8-flow"][0]
+    assert not flow.ok and "no pallas_call" in flow.detail
+
+
+def test_int8_flow_direction_both_ways():
+    """The taint walk must flag a whole-pool dequant but NOT a gathered-
+    slice convert (the running-scale requant path)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import int8_kernel_flow
+
+    pool = jnp.zeros((1, 8, 16, 2, 4), jnp.int8)
+
+    whole = jax.make_jaxpr(jax.jit(lambda p: p.astype(jnp.float32).sum()))(pool)
+    reached, ups = int8_kernel_flow(whole)
+    assert ups and not reached
+
+    blk = jnp.array([0, 3])
+    sliced = jax.make_jaxpr(
+        jax.jit(lambda p: p[:, blk].astype(jnp.float32).sum()))(pool)
+    reached, ups = int8_kernel_flow(sliced)
+    assert not ups
+
+
+def test_mutation_registry_is_complete():
+    reg = all_mutations()
+    assert len(reg) >= 14
+    assert {v for v in reg.values()} == {"lint", "kvsan", "jaxpr"}
+    # at least one mutation per analyzer and per lint rule
+    assert len(_lint_mutants()) == 4
+    assert len(_KVSAN_MUTANTS) == 6
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mid", [
+    "jaxpr-collective", "jaxpr-callback",
+    "jaxpr-int8-upcast", "jaxpr-cache-buckets",
+])
+def test_cli_jaxpr_mutations_exit_nonzero(mid):
+    assert main(["jaxpr", "--mutate", mid]) == 1
+
+
+def test_cli_rejects_mismatched_mutation():
+    assert main(["lint", "--mutate", "kvsan-double-free"]) == 1
+    assert main(["jaxpr", "--mutate", "no-such-id"]) == 1
+
+
+def test_cli_list_mutations(capsys):
+    assert main(["all", "--list-mutations"]) == 0
+    out = capsys.readouterr().out
+    for mid in all_mutations():
+        assert mid in out
+
+
+def test_cli_module_entry_point():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint"],
+        capture_output=True, text=True, timeout=300, env=env, cwd=root,
+    )
+    assert res.returncode == 0, (res.stdout, res.stderr)
+    assert "0 violation(s)" in res.stdout
+
+
+# ------------------------------------------------------------------ types
+
+
+def test_types_subcommand_skips_without_mypy():
+    try:
+        import mypy  # noqa: F401
+        pytest.skip("mypy installed: the real check runs in CI")
+    except ImportError:
+        pass
+    assert main(["types"]) == 0
+
+
+@pytest.mark.optional_dep
+def test_types_baseline_with_mypy():
+    pytest.importorskip("mypy")
+    assert main(["types"]) == 0

@@ -18,7 +18,7 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
                   long_decode: bool = False, preempt: str = "recompute",
                   pipeline: bool = True, kernel: str = "reference",
                   ragged: bool = True, kv_dtype: str = None,
-                  greedy: bool = False):
+                  greedy: bool = False, sanitize: bool = False):
     """Bursty seeded workload: waves of submits interleaved with engine steps.
     Prompts mix fresh random sequences with shared-retrieved-context prefixes
     (32 tokens = 2 full blocks at block_size=16). ``long_decode`` makes
@@ -30,6 +30,7 @@ def _run_workload(seed: int, *, n_blocks, scheduler: str, interleave: bool,
         prefill_chunk_size=16, token_budget=20,
         scheduler=scheduler, interleave=interleave, preempt=preempt,
         pipeline=pipeline, kernel=kernel, ragged=ragged, kv_dtype=kv_dtype,
+        sanitize=sanitize,
     )
     ctx = rng.integers(0, 90, size=32).astype(np.int32)
     reqs = []
@@ -129,6 +130,44 @@ def test_engine_invariants_after_drain(seed, n_blocks, scheduler, interleave,
         assert r.stream.stats.chunks_flushed >= 1 or not r.out_tokens
         assert r.delivered == r.out_tokens
     assert eng.flusher.backlog == 0
+
+
+@pytest.mark.parametrize(
+    "seed,n_blocks,preempt,pipeline,kv_dtype",
+    [
+        (0, None, "recompute", True, None),   # prefix sharing, full pool
+        (5, 6, "swap", True, None),           # swap tier under pipelining
+        (6, 6, "cost", False, None),          # cost preempt, sync oracle
+        (5, 6, "swap", True, "int8"),         # quantized pool + swap tier
+    ],
+)
+def test_invariants_under_kv_sanitizer(seed, n_blocks, preempt, pipeline,
+                                       kv_dtype):
+    """The full bursty workload under ``sanitize=True``: every pool, host-
+    tier and copy-engine transition replays through the kvsan shadow state
+    machine, which raises on any lifecycle violation (use-after-free,
+    double-free, refcount underflow, fill-before-reserve, aliasing,
+    swap-order). On drain the shadow must agree with the real pool: only
+    the scratch block allocated, warm set sizes matching."""
+    eng, reqs = _run_workload(
+        seed, n_blocks=n_blocks, scheduler="fifo", interleave=True,
+        long_decode=n_blocks is not None, preempt=preempt,
+        pipeline=pipeline, kv_dtype=kv_dtype, sanitize=True)
+    san = eng.sanitizer
+    assert san is not None and san.violations == 0
+    assert san.op_counts.get("device_alloc", 0) > 0
+    if n_blocks is not None:
+        assert eng.preemptions >= 1          # the shadow saw real churn
+        assert san.op_counts.get("host_reserve", 0) > 0
+        assert san.op_counts.get("host_restore", 0) > 0
+        assert san.op_counts.get("copy_submit", 0) > 0
+    assert all(r.done for r in reqs)
+    shadow = san.stats()
+    pool = eng.kv.pool
+    assert shadow["device_allocated"] == 1   # the scratch block only
+    assert shadow["device_warm"] == len(pool.cached)
+    assert shadow["copy_pending"] == 0
+    san.audit_host(eng.host_store) if eng.host_store is not None else None
 
 
 @pytest.mark.parametrize(
